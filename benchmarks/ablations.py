@@ -1,0 +1,113 @@
+"""Ablations beyond the paper's tables:
+
+  * (k, t) sensitivity — the paper remarks the hyperparameters "are not
+    sensitive"; we sweep both around the defaults.
+  * orphan re-attachment (DESIGN.md §3 deviation 2) on/off.
+  * sequence backend: skip list (paper) vs treap (Henzinger–King).
+  * repair-scan frequency (the Thm-2 fix's cost in practice).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import DynamicDBSCAN, GridLSH, adjusted_rand_index
+from repro.core.euler_tour import EulerTourForest
+from repro.data import blobs
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def kt_sensitivity(n=6000, seed=0):
+    X, y = blobs(n=n, d=10, n_clusters=10, cluster_std=0.25, seed=seed)
+    rows = []
+    for k in (5, 10, 20):
+        for t in (5, 10, 20):
+            dyn = DynamicDBSCAN(10, k, t, 0.75, seed=seed)
+            ids = [dyn.add_point(p) for p in X]
+            lab = dyn.labels(ids)
+            ari = adjusted_rand_index(y, np.array([lab[i] for i in ids]))
+            rows.append({"k": k, "t": t, "ari": ari})
+            print(f"  k={k:3d} t={t:3d} ARI={ari:.3f}")
+    spread = max(r["ari"] for r in rows) - min(r["ari"] for r in rows)
+    print(f"  ARI spread over 3x3 grid: {spread:.3f} (paper: 'not sensitive')")
+    return rows
+
+
+def orphan_ablation(n=5000, seed=1):
+    X, y = blobs(n=n, d=8, n_clusters=8, cluster_std=0.25, seed=seed)
+    rows = []
+    for attach in (True, False):
+        lsh = GridLSH(8, 0.6, 8, seed=seed)
+        dyn = DynamicDBSCAN(8, 10, 8, 0.6, lsh=lsh, attach_orphans=attach)
+        ids = [dyn.add_point(p) for p in X]
+        lab = dyn.labels(ids)
+        arr = np.array([lab[i] for i in ids])
+        rows.append({
+            "attach_orphans": attach,
+            "ari": adjusted_rand_index(y, arr),
+            "noise_frac": float((arr == -1).mean()),
+        })
+        print(f"  attach_orphans={attach}: ARI={rows[-1]['ari']:.3f} "
+              f"noise={rows[-1]['noise_frac']:.3f}")
+    return rows
+
+
+def backend_timing(n=4000, seed=2):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for backend in ("skiplist", "treap"):
+        f = EulerTourForest(seed=seed, backend=backend)
+        for v in range(n):
+            f.add_node(v)
+        t0 = time.perf_counter()
+        for i in range(4 * n):
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            if u == v:
+                continue
+            if rng.random() < 0.6:
+                f.link(u, v)
+            else:
+                f.cut(u, v)
+        dt = time.perf_counter() - t0
+        rows.append({"backend": backend, "us_per_op": dt / (4 * n) * 1e6})
+        print(f"  {backend:9} {rows[-1]['us_per_op']:8.1f} us/op")
+    return rows
+
+
+def repair_frequency(n=6000, seed=3):
+    X, _ = blobs(n=n, d=8, n_clusters=8, seed=seed)
+    dyn = DynamicDBSCAN(8, 10, 8, 0.6, seed=seed)
+    ids = [dyn.add_point(p) for p in X]
+    n_del = n // 2
+    for i in ids[:n_del]:
+        dyn.delete_point(i)
+    frac = dyn.n_repair_scans / n_del
+    print(f"  repair scans: {dyn.n_repair_scans} over {n_del} deletions "
+          f"({frac:.4f}/deletion), {dyn.n_repair_links} replacement links")
+    return {"deletions": n_del, "repair_scans": dyn.n_repair_scans,
+            "repair_links": dyn.n_repair_links, "frac": frac}
+
+
+def run():
+    print("== (k, t) sensitivity")
+    kt = kt_sensitivity()
+    print("== orphan re-attachment")
+    orphan = orphan_ablation()
+    print("== ETT sequence backend")
+    backend = backend_timing()
+    print("== Thm-2 repair frequency")
+    repair = repair_frequency()
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "ablations.json").write_text(json.dumps(
+        {"kt": kt, "orphan": orphan, "backend": backend, "repair": repair},
+        indent=1))
+    return kt, orphan, backend, repair
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Shared benchmark utilities: streaming evaluation protocol of the paper
+(§5): stream batches, recluster/update, evaluate ARI/NMI on all points."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    DynamicDBSCAN, EMZFixedCore, EMZRecompute, GridLSH, SklearnStyleDBSCAN,
+    adjusted_rand_index, normalized_mutual_info,
+)
+from repro.core.batched import BatchedDynamicDBSCAN
+
+
+def stream_eval(
+    name: str,
+    X: np.ndarray,
+    y: np.ndarray,
+    k: int = 10,
+    t: int = 10,
+    eps: float = 0.75,
+    batch: int = 1000,
+    seed: int = 0,
+    algos=("dydbscan", "emz", "sklearn"),
+    eval_every: Optional[int] = None,
+) -> Dict[str, Dict]:
+    """Run the paper's streaming protocol; returns per-algo time/ARI/NMI."""
+    d = X.shape[1]
+    lsh = GridLSH(d, eps, t, seed=seed)
+    out: Dict[str, Dict] = {}
+
+    for algo in algos:
+        t_total = 0.0
+        labels = None
+        if algo == "dydbscan":
+            inst = DynamicDBSCAN(d, k, t, eps, lsh=lsh)
+            ids: List[int] = []
+            for s in range(0, len(X), batch):
+                xb = X[s : s + batch]
+                t0 = time.perf_counter()
+                for p in xb:
+                    ids.append(inst.add_point(p))
+                lab = inst.labels(ids)
+                t_total += time.perf_counter() - t0
+            labels = np.array([lab[i] for i in ids])
+        elif algo == "dydbscan_batched":
+            inst = BatchedDynamicDBSCAN(d, k, t, eps, seed=seed)
+            ids = []
+            for s in range(0, len(X), batch):
+                xb = X[s : s + batch]
+                t0 = time.perf_counter()
+                ids.extend(inst.add_batch(xb))
+                lab = inst.labels(ids)
+                t_total += time.perf_counter() - t0
+            labels = np.array([lab[i] for i in ids])
+        elif algo == "emz":
+            inst = EMZRecompute(d, k, t, eps, lsh=lsh)
+            for s in range(0, len(X), batch):
+                t0 = time.perf_counter()
+                labels = inst.add_batch(X[s : s + batch])
+                t_total += time.perf_counter() - t0
+        elif algo == "emz_fixed":
+            inst = EMZFixedCore(d, k, t, eps, lsh=lsh)
+            for s in range(0, len(X), batch):
+                t0 = time.perf_counter()
+                labels = inst.add_batch(X[s : s + batch])
+                t_total += time.perf_counter() - t0
+        elif algo == "sklearn":
+            inst = SklearnStyleDBSCAN(k, eps)
+            for s in range(0, len(X), batch):
+                t0 = time.perf_counter()
+                labels = inst.add_batch(X[s : s + batch])
+                t_total += time.perf_counter() - t0
+        else:
+            raise ValueError(algo)
+        out[algo] = {
+            "time_s": t_total,
+            "ari": adjusted_rand_index(y, labels),
+            "nmi": normalized_mutual_info(y, labels),
+        }
+    return out

@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: lsh_hash / pairwise / flash-attention wall time
+(jnp ref path on CPU; the Pallas kernels target TPU and are validated in
+interpret mode) + device-hash batched-update throughput vs the sequential
+host path (the beyond-paper batch optimisation)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DynamicDBSCAN, GridLSH
+from repro.core.batched import BatchedDynamicDBSCAN
+from repro.data import blobs
+from repro.kernels import ops
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # hashing: (n, d) -> (n, t, 2)
+    for n, d, t in [(100_000, 20, 10), (500_000, 20, 10)]:
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        eta = jnp.asarray(rng.uniform(0, 1.5, t), jnp.float32)
+        mix = jnp.asarray(rng.integers(1, 2**31 - 1, (2, t, d)), jnp.int32)
+        dt = _time(lambda a, b, c: ops.lsh_hash(a, b, c, inv_cell=1 / 1.5, impl="ref"),
+                   x, eta, mix)
+        rows.append({"bench": f"lsh_hash n={n}", "us_per_call": dt * 1e6,
+                     "derived": f"{n / dt / 1e6:.1f} Mpoints/s"})
+
+    # pairwise counts
+    for n, d in [(4000, 20)]:
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        dt = _time(lambda a: ops.eps_neighbor_counts(a, eps=0.75, impl="ref"), x)
+        rows.append({"bench": f"pairwise n={n}", "us_per_call": dt * 1e6,
+                     "derived": f"{2 * n * n * d / dt / 1e9:.1f} GFLOP/s"})
+
+    # attention (jnp chunked fallback used by models)
+    from repro.models.attention import chunked_attention
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
+    kv = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)), jnp.bfloat16)
+    dt = _time(lambda a, b: chunked_attention(a, b, b, chunk=256), q, kv)
+    flops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2  # causal half
+    rows.append({"bench": "attention b1 h8 s1024", "us_per_call": dt * 1e6,
+                 "derived": f"{flops / dt / 1e9:.1f} GFLOP/s"})
+
+    # batched vs sequential dynamic updates (paper technique throughput)
+    X, _ = blobs(n=20000, d=20, n_clusters=10, seed=1)
+    t0 = time.perf_counter()
+    seq = DynamicDBSCAN(20, 10, 10, 0.75, seed=0)
+    for p in X:
+        seq.add_point(p)
+    dt_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = BatchedDynamicDBSCAN(20, 10, 10, 0.75, seed=0)
+    for s in range(0, len(X), 1000):
+        bat.add_batch(X[s : s + 1000])
+    dt_bat = time.perf_counter() - t0
+    rows.append({"bench": "dyn insert 20k seq", "us_per_call": dt_seq / len(X) * 1e6,
+                 "derived": f"{len(X)/dt_seq:.0f} pts/s"})
+    rows.append({"bench": "dyn insert 20k batched", "us_per_call": dt_bat / len(X) * 1e6,
+                 "derived": f"{len(X)/dt_bat:.0f} pts/s ({dt_seq/dt_bat:.2f}x)"})
+    for r in rows:
+        print(f"{r['bench']:28} {r['us_per_call']:12.1f} us  {r['derived']}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "kernels.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Benchmark harness: one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and a
+human-readable report; JSON artifacts land in results/.
+
+  PYTHONPATH=src python -m benchmarks.run            # CI-scale
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale n
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=["table2", "figure2", "scaling", "kernels",
+                             "ablations", "paper_roofline", "roofline"])
+    args = ap.parse_args(argv)
+
+    csv_rows = []
+
+    def emit(name, us, derived):
+        csv_rows.append(f"{name},{us:.1f},{derived}")
+
+    if args.only in (None, "table2"):
+        print("\n===== Table 2: streaming time / ARI / NMI =====")
+        from .table2 import run as t2
+        rows = t2(scale=1.0 if args.full else 0.05)
+        for r in rows:
+            emit(f"table2/{r['dataset']}/{r['algo']}",
+                 r["time_s"] * 1e6,
+                 f"ARI={r['ari']:.3f};NMI={r['nmi']:.3f}")
+
+    if args.only in (None, "figure2"):
+        print("\n===== Figure 2: blobs arrival-order study =====")
+        from .figure2 import main as f2
+        out = f2(["--n", "20000" if args.full else "8000"])
+        for order, curves in out.items():
+            for algo, c in curves.items():
+                emit(f"figure2/{order}/{algo}", c["cum_time"][-1] * 1e6,
+                     f"ARI={c['ari'][-1]:.3f}")
+
+    if args.only in (None, "scaling"):
+        print("\n===== Update-complexity scaling (Thm 1 / Remark 1) =====")
+        from .scaling import run as sc
+        rows = sc(max_n=64000 if args.full else 16000)
+        for r in rows:
+            emit(f"scaling/n{r['n']}", r["dyn_per_update_us"],
+                 f"emz_recompute={r['emz_recompute_s']:.3f}s")
+
+    if args.only in (None, "kernels"):
+        print("\n===== Kernel / batched-update benches =====")
+        from .kernels import run as kr
+        for r in kr():
+            emit(r["bench"].replace(" ", "_"), r["us_per_call"], r["derived"])
+
+    if args.only in (None, "ablations"):
+        print("\n===== Ablations (k/t sensitivity, backends, repair) =====")
+        from .ablations import run as ab
+        kt, orphan, backend, repair = ab()
+        for r in backend:
+            emit(f"ablation/ett_{r['backend']}", r["us_per_op"], "per link/cut op")
+        emit("ablation/kt_spread",
+             (max(r["ari"] for r in kt) - min(r["ari"] for r in kt)) * 1e6,
+             "ARI spread over 3x3 (k,t) grid")
+        emit("ablation/repair_scans_per_del", repair["frac"] * 1e6,
+             f"links={repair['repair_links']}")
+
+    if args.only in (None, "paper_roofline"):
+        print("\n===== Paper-technique roofline (grid-LSH hashing) =====")
+        from .paper_roofline import run as pr
+        rows = pr()
+        emit("paper_roofline/floor", rows["roofline_time_floor_us"],
+             "traffic floor @819GB/s")
+        emit("paper_roofline/jnp_ref", rows["roofline_time_ref_us"],
+             f"{rows['ref_vs_floor']:.2f}x floor")
+        emit("paper_roofline/pallas", rows["roofline_time_floor_us"],
+             "1.00x floor (VMEM single pass)")
+
+    if args.only in (None, "roofline"):
+        print("\n===== Roofline table (from dry-run artifacts) =====")
+        try:
+            from repro.launch.roofline import build_table, format_table
+            rows = build_table()
+            print(format_table(rows))
+            for r in rows:
+                if r.get("status") == "ok":
+                    emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         r["bound_time_s"] * 1e6,
+                         f"dominant={r['dominant']};MFU_ub={r.get('mfu_upper_bound', 0):.3f}")
+        except FileNotFoundError:
+            print("(no results/dryrun.json yet — run repro.launch.dryrun)")
+
+    print("\n===== CSV =====")
+    print("name,us_per_call,derived")
+    for line in csv_rows:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Table 2: runtime / ARI / NMI of DyDBSCAN vs EMZ vs exact DBSCAN
+under the streaming protocol, across the six datasets (offline stand-ins;
+blobs is exactly the paper's synthetic mixture — see DESIGN.md §7).
+
+Default sizes are scaled (scale=0.1) so the suite finishes on one CPU
+core; --full runs the paper's n.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.data import DATASET_SPECS, blobs, dataset_standin
+
+from .common import stream_eval
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+# (k, t, eps) per paper §5: k=10 t=10 eps=0.75 everywhere
+K, T, EPS = 10, 10, 0.75
+
+
+def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0):
+    datasets = datasets or ["letter", "mnist", "fashion-mnist", "blobs"]
+    algos = algos or ("dydbscan", "emz", "emz_fixed", "sklearn")
+    rows = []
+    for name in datasets:
+        if name == "blobs":
+            n, d, c = DATASET_SPECS[name]
+            X, y = blobs(n=max(2000, int(n * scale)), d=d, n_clusters=c,
+                         cluster_std=0.25, seed=seed)
+        else:
+            X, y = dataset_standin(name, seed=seed, scale=scale)
+        # exact DBSCAN is O(n^2): cap its dataset size
+        use = tuple(a for a in algos
+                    if not (a == "sklearn" and len(X) > 25000))
+        res = stream_eval(name, X, y, k=K, t=T, eps=EPS, seed=seed, algos=use)
+        for algo, m in res.items():
+            rows.append({"dataset": name, "n": len(X), "algo": algo, **m})
+            print(f"{name:15} n={len(X):7d} {algo:12} "
+                  f"time={m['time_s']:8.2f}s ARI={m['ari']:.3f} "
+                  f"NMI={m['nmi']:.3f}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "table2.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--datasets", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    run(scale=1.0 if args.full else args.scale, datasets=args.datasets)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Serve a small model with batched requests + request clustering.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "mamba2-780m", "--smoke", "--requests", "12",
+                "--batch", "4", "--cluster"])

@@ -1,0 +1,11 @@
+# The paper's primary contribution: dynamic DBSCAN over an Euler-Tour
+# dynamic forest, plus the static baselines it is evaluated against.
+from .dynamic_dbscan import DynamicDBSCAN, NOISE  # noqa: F401
+from .euler_tour import EulerTourForest  # noqa: F401
+from .fixed_core import EMZFixedCore  # noqa: F401
+from .hashing import GridLSH  # noqa: F401
+from .metrics import adjusted_rand_index, normalized_mutual_info  # noqa: F401
+from .naive_dbscan import SklearnStyleDBSCAN, dbscan  # noqa: F401
+from .skiplist import SkipListSeq  # noqa: F401
+from .static_emz import EMZRecompute, emz_cluster  # noqa: F401
+from .batched import BatchedDynamicDBSCAN  # noqa: F401

@@ -1,0 +1,75 @@
+"""Beyond-paper batched update path: device hashing + host structure.
+
+The paper processes a batch of B updates as B sequential O(polylog)
+operations, each paying O(t·d) hashing on the host.  On TPU the hashing is
+one ``lsh_hash`` kernel call over the whole batch (bandwidth-bound, ~t
+ops/byte); only the (B, t, 2) int32 keys come back to the host, which then
+performs the pointer updates.  The clustering is identical (H is invariant
+to update order and to the key representation — §4.2), the throughput is
+not: see benchmarks/kernels.py.
+
+``BatchedDynamicDBSCAN`` shares all the machinery of ``DynamicDBSCAN`` but
+keys every bucket by the kernel's mixed keys, so single-point and batch
+updates interoperate.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .dynamic_dbscan import DynamicDBSCAN
+from .hashing import GridLSH
+
+
+class BatchedDynamicDBSCAN(DynamicDBSCAN):
+    def __init__(self, d, k, t, eps, seed: int = 0, use_device: bool = False,
+                 attach_orphans: bool = True, lsh: Optional[GridLSH] = None):
+        super().__init__(d, k, t, eps, seed=seed,
+                         attach_orphans=attach_orphans, lsh=lsh)
+        self.use_device = use_device
+        self._jax_fn = None
+
+    # key space: kernel mixed keys (int32 pairs) instead of exact codes
+    def _keys_of_batch(self, X: np.ndarray) -> List[list]:
+        X = np.asarray(X, dtype=np.float32)
+        if self.use_device:
+            keys = np.asarray(self._device_hash(X))
+        else:
+            keys = self.lsh.device_keys_batch(X)
+        return [
+            [keys[j, i].tobytes() for i in range(self.t)]
+            for j in range(X.shape[0])
+        ]
+
+    def _device_hash(self, X: np.ndarray):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        return ops.lsh_hash(
+            jnp.asarray(X),
+            jnp.asarray(self.lsh.eta.astype(np.float32)),
+            jnp.asarray(self.lsh.mixers),
+            inv_cell=self.lsh.inv_cell,
+            impl="pallas_interpret" if self.use_device == "interpret" else None,
+        )
+
+    def add_point(self, x: np.ndarray, idx: Optional[int] = None) -> int:
+        return self.add_batch(np.asarray(x, dtype=np.float64)[None])[0]
+
+    def add_batch(self, X: np.ndarray) -> List[int]:
+        """Hash the whole batch in one kernel call, then apply updates."""
+        X = np.asarray(X, dtype=np.float64)
+        keys = self._keys_of_batch(X)
+        out = []
+        for j in range(X.shape[0]):
+            idx = self._next_idx
+            self._next_idx += 1
+            out.append(self._add_with_keys(X[j], keys[j], idx))
+        return out
+
+    def delete_batch(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            self.delete_point(i)

@@ -1,0 +1,353 @@
+"""DynamicDBSCAN — Algorithm 2 of the paper.
+
+Maintains, under point insertions and deletions:
+  * t grid-LSH tables with per-bucket ordered core chains;
+  * the exact core set of Definition 4 via per-point *support counts*
+    (``support[x] = #{i : |bucket_i(x)| >= k}``; core ⟺ support > 0) —
+    this fixes the demotion edge case in the paper's pseudocode, see
+    DESIGN.md §3;
+  * a spanning forest of the collision graph H in an Euler-Tour-Sequence
+    dynamic forest, with per-bucket core *paths* (degree O(t)) and non-core
+    points attached with degree ≤ 1.
+
+Per-update cost: O(t·k) bucket/support work on threshold crossings plus
+O(t) LINK/CUT/ROOT calls at O(log n) each — the paper's
+O(t²·k·(d + log n)) ⇒ O(d log³ n + log⁴ n) with t,k = Θ(log n).
+
+``GetCluster`` is ROOT on the forest: O(log n).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Set
+
+import numpy as np
+
+from .buckets import BucketIndex
+from .euler_tour import EulerTourForest
+from .hashing import GridLSH
+
+NOISE = -1
+
+
+class DynamicDBSCAN:
+    def __init__(
+        self,
+        d: int,
+        k: int,
+        t: int,
+        eps: float,
+        seed: int = 0,
+        attach_orphans: bool = True,
+        lsh: Optional[GridLSH] = None,
+        repair: str = "exact",
+    ):
+        if repair not in ("exact", "paper"):
+            raise ValueError(repair)
+        # 'exact' restores the Thm-2 spanning-forest invariant with a
+        # replacement-edge scan (O(smaller side) on genuine splits);
+        # 'paper' is Alg. 2's literal pred/succ-only repair — cheaper, but
+        # can strand cores after deletions (DESIGN.md §3).
+        self.repair = repair
+        self.d, self.k, self.t, self.eps = d, int(k), int(t), float(eps)
+        self.lsh = lsh if lsh is not None else GridLSH(d, eps, t, seed)
+        if self.lsh.t != self.t or self.lsh.d != d:
+            raise ValueError("lsh family incompatible with (d, t)")
+        self.attach_orphans = attach_orphans
+        self.forest = EulerTourForest(seed=seed)
+        self.buckets = BucketIndex(self.t)
+        self.points: Dict[int, np.ndarray] = {}
+        self.keys: Dict[int, list] = {}       # idx -> [t bucket keys]
+        self.support: Dict[int, int] = {}     # idx -> #buckets of size >= k
+        self.attach: Dict[int, Optional[int]] = {}   # non-core -> anchor core
+        self.anchored: Dict[int, Set[int]] = {}      # core -> anchored set
+        self._next_idx = 0
+        # instrumentation: how often the replacement-edge repair fires
+        self.n_repair_scans = 0
+        self.n_repair_links = 0
+
+    # ------------------------------------------------------------------ #
+    # public API (paper's procedures)
+    # ------------------------------------------------------------------ #
+    def add_point(self, x: np.ndarray, idx: Optional[int] = None) -> int:
+        """AddPoint(x).  Returns the point's index (stable handle)."""
+        if idx is None:
+            idx = self._next_idx
+        elif idx in self.points:
+            raise KeyError(f"index {idx} already present")
+        self._next_idx = max(self._next_idx, idx + 1)
+        x = np.asarray(x, dtype=np.float64)
+        keys = self.lsh.keys(x)
+        return self._add_with_keys(x, keys, idx)
+
+    def _add_with_keys(self, x: np.ndarray, keys: list, idx: int) -> int:
+        self.points[idx] = x
+        self.keys[idx] = keys
+        self.support[idx] = 0
+        self.attach[idx] = None
+        self.forest.add_node(idx)
+
+        promoted: Set[int] = set()  # the paper's C'
+        for i, key in enumerate(keys):
+            b = self.buckets.get_or_create(i, key)
+            b.members.add(idx)
+            sz = len(b.members)
+            if sz == self.k:
+                # bucket crosses the threshold: every member gains support
+                for y in b.members:
+                    self.support[y] += 1
+                    if self.support[y] == 1:
+                        promoted.add(y)
+            elif sz > self.k:
+                self.support[idx] += 1
+                if self.support[idx] == 1:
+                    promoted.add(idx)
+
+        for c in sorted(promoted):  # idx order keeps chains coherent
+            self._link_core_point(c)
+        if self.support[idx] == 0:
+            self._link_non_core_point(idx)
+        return idx
+
+    def delete_point(self, idx: int) -> None:
+        """DeletePoint(x)."""
+        if idx not in self.points:
+            raise KeyError(idx)
+        if self.support[idx] > 0:
+            self._unlink_core_point(idx)  # path repair + anchored re-link
+        else:
+            anchor = self.attach[idx]
+            if anchor is not None:
+                self.forest.cut(idx, anchor)
+                self.anchored[anchor].discard(idx)
+
+        demoted: List[int] = []
+        for i, key in enumerate(self.keys[idx]):
+            b = self.buckets.get(i, key)
+            b.members.discard(idx)
+            sz = len(b.members)
+            if sz == self.k - 1:
+                # bucket drops below threshold: remaining members lose support
+                for y in b.members:
+                    self.support[y] -= 1
+                    if self.support[y] == 0:
+                        demoted.append(y)
+            self.buckets.drop_if_empty(i, key)
+
+        for c in sorted(demoted):
+            self._unlink_core_point(c)
+            self._link_non_core_point(c)
+
+        self.forest.remove_node(idx)
+        for m in (self.points, self.keys, self.support, self.attach):
+            del m[idx]
+        self.anchored.pop(idx, None)
+
+    def get_cluster(self, idx: int):
+        """GetCluster(x): unique id of x's cluster — ROOT on the forest."""
+        return self.forest.root(idx)
+
+    def is_core(self, idx: int) -> bool:
+        return self.support[idx] > 0
+
+    def core_set(self) -> Set[int]:
+        return {i for i, s in self.support.items() if s > 0}
+
+    # ------------------------------------------------------------------ #
+    # bulk label extraction (for evaluation after each batch)
+    # ------------------------------------------------------------------ #
+    def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
+        """Cluster labels; noise (unattached non-core) -> NOISE.
+
+        Uses one vectorised connected-components pass over the forest's
+        edge list (O(n)) instead of n ROOT queries; identical partition.
+        """
+        import scipy.sparse as sp
+        from scipy.sparse.csgraph import connected_components
+
+        ids = list(self.points.keys()) if ids is None else list(ids)
+        id_to_pos = {v: i for i, v in enumerate(ids)}
+        rows, cols = [], []
+        seen = set()
+        for (u, v) in self.forest._edge.keys():
+            if (v, u) in seen:
+                continue
+            seen.add((u, v))
+            if u in id_to_pos and v in id_to_pos:
+                rows.append(id_to_pos[u])
+                cols.append(id_to_pos[v])
+        n = len(ids)
+        g = sp.coo_matrix(
+            (np.ones(len(rows)), (rows, cols)), shape=(n, n)
+        )
+        _, comp = connected_components(g, directed=False)
+        out: Dict[int, int] = {}
+        for v, pos in id_to_pos.items():
+            if self.support[v] == 0 and self.attach[v] is None:
+                out[v] = NOISE
+            else:
+                out[v] = int(comp[pos])
+        return out
+
+    # ------------------------------------------------------------------ #
+    # internal: Alg. 2 subroutines
+    # ------------------------------------------------------------------ #
+    def _link_core_point(self, c: int) -> None:
+        """LinkCorePoint: splice c into every bucket's core chain."""
+        # cut any edge incident to c (non-core c had at most its anchor)
+        anchor = self.attach[c]
+        if anchor is not None:
+            self.forest.cut(c, anchor)
+            self.anchored[anchor].discard(c)
+            self.attach[c] = None
+
+        for i, key in enumerate(self.keys[c]):
+            b = self.buckets.get(i, key)
+            c1, c2 = b.core_neighbors(c)
+            b.add_core(c)
+            if c1 is not None and c2 is not None:
+                self.forest.cut(c1, c2)
+            if c1 is not None:
+                self.forest.link(c1, c)
+            if c2 is not None:
+                self.forest.link(c, c2)
+            # orphan re-attachment (DESIGN.md §3.2): only sub-threshold
+            # buckets can contain non-core members, so this scan is O(k).
+            if self.attach_orphans and len(b.members) < self.k:
+                for y in b.members:
+                    if y != c and self.support[y] == 0 and self.attach[y] is None:
+                        self._anchor(y, c)
+
+    def _unlink_core_point(self, c: int) -> None:
+        """UnlinkCorePoint: remove c from every chain, repairing paths.
+
+        The paper's repair (LINK the pred/succ pair per bucket) is not
+        sufficient on its own: cycle-avoided chain links mean a bucket's
+        connectivity may route through ``c`` via *another* bucket's edge,
+        stranding cores the local repair never touches (DESIGN.md §3.4).
+        We therefore collect every vertex whose tree may have changed and
+        run a replacement-edge scan over the split-off components —
+        H-edges are recoverable from the bucket chains, so this restores
+        the exact spanning-forest invariant (Thm 2) at a cost proportional
+        to the smaller side, and is free when nothing actually split.
+        """
+        touched: List[int] = []
+        for i, key in enumerate(self.keys[c]):
+            b = self.buckets.get(i, key)
+            c1, c2 = b.core_neighbors(c)
+            b.remove_core(c)
+            if c1 is not None:
+                self.forest.cut(c1, c)
+                touched.append(c1)
+            if c2 is not None:
+                self.forest.cut(c, c2)
+                touched.append(c2)
+            if c1 is not None and c2 is not None:
+                self.forest.link(c1, c2)
+        # re-link any non-core points attached to c
+        for y in list(self.anchored.get(c, ())):
+            self.forest.cut(y, c)
+            self.anchored[c].discard(y)
+            self.attach[y] = None
+            self._link_non_core_point(y)
+            touched.append(y)
+        self._repair_components(touched)
+
+    # ------------------------------------------------------------------ #
+    # replacement-edge repair (correctness fix over the paper's pseudocode)
+    # ------------------------------------------------------------------ #
+    def _repair_components(self, touched: List[int]) -> None:
+        """Re-merge split-off components that H still connects.
+
+        Every component created by the cuts contains one of ``touched``.
+        For all but the largest such component, scan each core member's
+        buckets and LINK it to its chain pred/succ — this covers every
+        consecutive-core H-pair with an endpoint in a scanned component,
+        which is exactly the set of possibly-stranded pairs.
+        """
+        if self.repair == "paper":
+            return
+        comps = {}
+        for v in touched:
+            if v in self.points:
+                comps.setdefault(self.forest.root(v), v)
+        if len(comps) <= 1:
+            return
+        self.n_repair_scans += 1
+        # enumerate components round-robin so total work is bounded by the
+        # SMALLER sides: the last iterator standing is the largest
+        # component and is never fully materialised.
+        iters = {r: self.forest.tree_nodes(v) for r, v in comps.items()}
+        collected = {r: [] for r in comps}
+        active = set(iters)
+        while len(active) > 1:
+            for r in list(active):
+                try:
+                    collected[r].append(next(iters[r]))
+                except StopIteration:
+                    active.discard(r)
+        snapshots = [collected[r] for r in comps if r not in active]
+        for snap in snapshots:
+            for w in snap:
+                if self.support.get(w, 0) == 0:
+                    continue
+                for j, key in enumerate(self.keys[w]):
+                    b = self.buckets.get(j, key)
+                    p, s = b.core_neighbors(w)
+                    for cand in (p, s):
+                        if cand is not None and self.forest.link(w, cand):
+                            self.n_repair_links += 1
+
+    def _link_non_core_point(self, x: int) -> None:
+        """LinkNonCorePoint: attach x to one colliding core point, if any."""
+        for i, key in enumerate(self.keys[x]):
+            b = self.buckets.get(i, key)
+            if b is None:
+                continue
+            c = b.first_core()
+            if c is not None and c != x:
+                self._anchor(x, c)
+                return
+
+    def _anchor(self, y: int, c: int) -> None:
+        if self.forest.link(y, c):
+            self.attach[y] = c
+            self.anchored.setdefault(c, set()).add(y)
+
+    # ------------------------------------------------------------------ #
+    # invariant checks (used by tests)
+    # ------------------------------------------------------------------ #
+    def check_invariants(self) -> None:
+        # 1. support counts are exact
+        for idx, keys in self.keys.items():
+            s = sum(
+                1 for i, key in enumerate(keys) if len(self.buckets.get(i, key)) >= self.k
+            )
+            assert s == self.support[idx], (idx, s, self.support[idx])
+        # 2. buckets of size >= k contain only core points; core chains match
+        for i, table in enumerate(self.buckets.tables):
+            for key, b in table.items():
+                cores = sorted(y for y in b.members if self.support[y] > 0)
+                assert b.cores == cores, (i, key, b.cores, cores)
+                if len(b.members) >= self.k:
+                    assert len(cores) == len(b.members)
+        # 3. non-core degree <= 1; forest degrees of cores O(t)
+        for idx in self.points:
+            deg = self.forest.degree(idx)
+            if self.support[idx] == 0:
+                assert deg <= 1, (idx, deg)
+                if self.attach[idx] is not None:
+                    assert self.forest.has_edge(idx, self.attach[idx])
+            else:
+                assert deg <= 2 * self.t + len(self.anchored.get(idx, ())), idx
+        # 4. forest edges only touch (core,core) or (core,non-core anchor)
+        for (u, v) in self.forest._edge:
+            su, sv = self.support[u] > 0, self.support[v] > 0
+            assert su or sv, (u, v)
+        # 5. every core pair sharing a bucket is in the same tree (Thm 2)
+        for i, table in enumerate(self.buckets.tables):
+            for key, b in table.items():
+                if len(b.cores) > 1:
+                    r0 = self.forest.root(b.cores[0])
+                    for c in b.cores[1:]:
+                        assert self.forest.root(c) == r0

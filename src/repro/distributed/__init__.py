@@ -1,0 +1,1 @@
+from .compression import int8_compress_decompress, make_compressed_grad_transform, topk_compress_decompress  # noqa: F401

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots, each with a jit'd wrapper
+# (ops.py) and a pure-jnp oracle (ref.py):
+#   lsh_hash        - grid-LSH bucket keys (the paper's per-update hashing)
+#   pairwise_dist   - eps-neighbour counting (exact-DBSCAN baseline)
+#   flash_attention - blocked online-softmax attention (LM substrate)
+# Public API: repro.kernels.ops (impl dispatch: 'ref' | 'pallas' |
+# 'pallas_interpret'); submodules are importable directly.
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op dispatches between the Mosaic TPU kernel and the pure-jnp reference
+(``ref.py``).  The dry-run lowers on a CPU backend where Mosaic kernels are
+unavailable, so ``impl='ref'`` is the default there; on real TPU hardware
+pass ``impl='pallas'`` (or set ``REPRO_KERNELS=pallas``).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import lsh_hash as _lh
+from . import pairwise_dist as _pd
+from . import ref as _ref
+
+
+def _impl(impl: str | None) -> str:
+    if impl is None:
+        impl = os.environ.get("REPRO_KERNELS", "ref")
+    if impl not in ("ref", "pallas", "pallas_interpret"):
+        raise ValueError(impl)
+    return impl
+
+
+def lsh_hash(x, eta, mixers, *, inv_cell: float, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "ref":
+        return _ref.lsh_hash(x, eta, mixers, inv_cell)
+    return _lh.lsh_hash(
+        x, eta, mixers, inv_cell=inv_cell, interpret=impl == "pallas_interpret"
+    )
+
+
+def eps_neighbor_counts(x, *, eps: float, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "ref":
+        return _ref.eps_neighbor_counts(x, eps)
+    return _pd.eps_neighbor_counts(
+        x, eps=eps, interpret=impl == "pallas_interpret"
+    )
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, scale=None,
+    impl: str | None = None, block_q: int = 128, block_k: int = 128,
+):
+    impl = _impl(impl)
+    if impl == "ref":
+        return _ref.attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        )
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=impl == "pallas_interpret",
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose (bit-exact for the integer hash) against these.
+They are also the *portable* implementations used when lowering for
+backends where the Mosaic TPU kernels are unavailable (e.g. the CPU
+dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# murmur3-style finalizer constants (int32 wrap-around arithmetic);
+# plain Python ints so Pallas kernels don't capture traced constants
+MIX_A = -1975444243  # 0x85EBCA6D as int32
+MIX_B = -1029739211  # 0xC2B2AE35 as int32
+
+
+def _avalanche(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    h = h * MIX_A
+    h = h ^ jax.lax.shift_right_logical(h, 13)
+    h = h * MIX_B
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    return h
+
+
+def lsh_hash(x: jnp.ndarray, eta: jnp.ndarray, mixers: jnp.ndarray,
+             inv_cell: float) -> jnp.ndarray:
+    """Grid-LSH bucket keys.
+
+    x:      (n, d) float32 points
+    eta:    (t,)   float32 per-table offsets (the paper's eta * 1_d)
+    mixers: (2, t, d) int32 odd multipliers (two independent families)
+    returns (n, t, 2) int32 keys; two points share a bucket in table i iff
+    their grid-code vectors match — keys collide spuriously w.p. ~2^-64.
+    """
+    codes = jnp.floor(
+        (x[:, None, :] + eta[None, :, None]) * jnp.float32(inv_cell)
+    ).astype(jnp.int32)  # (n, t, d)
+    # (n, t, d) * (t, d) summed over d, int32 wrap-around
+    acc_a = jnp.sum(codes * mixers[0][None], axis=-1, dtype=jnp.int32)
+    acc_b = jnp.sum(codes * mixers[1][None], axis=-1, dtype=jnp.int32)
+    return jnp.stack([_avalanche(acc_a), _avalanche(acc_b)], axis=-1)
+
+
+def eps_neighbor_counts(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """|B(x_i, eps)| per point (self included), O(n^2 d)."""
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sum(d2 <= eps * eps + 1e-6, axis=-1).astype(jnp.int32)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference GQA attention.
+
+    q: (b, hq, sq, dh); k, v: (b, hkv, skv, dh) with hq % hkv == 0.
+    ``q_offset``: absolute position of q[0] (for decode: skv - sq).
+    ``window``: sliding-window size (keys with q_pos - k_pos >= window are
+    masked); None = full.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)

@@ -1,0 +1,210 @@
+"""Dry-run cell construction: (arch × shape × mesh) -> lowered/compiled
+step with ShapeDtypeStruct inputs and NamedSharding in_shardings.
+
+Everything here is allocation-free: params come from ``jax.eval_shape``
+over the model init, caches likewise; only the compiled artifact and its
+analyses are materialised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, ShapeConfig, get_config, get_shape
+from ..models import encdec as ED
+from ..models.registry import ModelAPI, build_model
+from ..optim import AdamW, warmup_cosine
+from ..sharding import logical_to_spec, spec_tree
+from ..training import make_train_step
+
+# per-(arch, shape) gradient-accumulation overrides: bounds live activation
+# memory so the big configs fit 16 GB/chip (§Perf iterates on these)
+ACCUM_OVERRIDES = {
+    ("qwen1.5-110b", "train_4k"): 16,
+    ("granite-20b", "train_4k"): 8,
+    ("gemma3-27b", "train_4k"): 8,
+    ("dbrx-132b", "train_4k"): 16,
+    ("llava-next-mistral-7b", "train_4k"): 4,
+    ("phi3-mini-3.8b", "train_4k"): 4,
+    ("hymba-1.5b", "train_4k"): 2,
+    ("mamba2-780m", "train_4k"): 2,
+    ("granite-moe-1b-a400m", "train_4k"): 2,
+    ("whisper-small", "train_4k"): 2,
+}
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh, axes_tree, shape_tree):
+    specs = spec_tree(axes_tree, shape_tree, mesh)
+    return jax.tree.map(
+        lambda s: _named(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_params(model: ModelAPI) -> Tuple[Any, Any]:
+    holder = {}
+
+    def init_params(key):
+        p, a = model.init(key)
+        holder["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    return shapes, holder["axes"]
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    out: Dict[str, Any] = {}
+    ax: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        s_txt = max(S // 4, 8)
+        out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+        ax["frames"] = ("batch", None, None)
+        out["tokens"] = jax.ShapeDtypeStruct((B, s_txt), i32)
+        ax["tokens"] = ("batch", None)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((B, s_txt), i32)
+            ax["labels"] = ("batch", None)
+    elif cfg.family == "vlm":
+        s_txt = S - cfg.n_patches
+        out["tokens"] = jax.ShapeDtypeStruct((B, s_txt), i32)
+        ax["tokens"] = ("batch", None)
+        out["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_vision), bf16)
+        ax["patches"] = ("batch", None, None)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((B, s_txt), i32)
+            ax["labels"] = ("batch", None)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        ax["tokens"] = ("batch", None)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            ax["labels"] = ("batch", None)
+    return out, ax
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ArchConfig
+    step_fn: Any         # jitted
+    args: tuple          # ShapeDtypeStructs
+    kind: str
+    mesh: Any = None
+
+    def lower(self):
+        # trace under the mesh context so with_sharding_constraint
+        # (shard_activation) resolves logical axes against a live mesh
+        with self.mesh:
+            return self.step_fn.lower(*self.args)
+
+    def run(self, *args):
+        with self.mesh:
+            return self.step_fn(*args)
+
+
+def build_cell(arch_id: str, shape_id: str, mesh: Mesh,
+               grad_accum: Optional[int] = None,
+               cfg: Optional[ArchConfig] = None,
+               shape: Optional[ShapeConfig] = None) -> Cell:
+    cfg = cfg if cfg is not None else get_config(arch_id)
+    shape = shape if shape is not None else get_shape(shape_id)
+    model = build_model(cfg)
+    pshapes, paxes = abstract_params(model)
+    pshard = _tree_shardings(mesh, paxes, pshapes)
+    repl = _named(mesh, P())
+
+    if shape.kind == "train":
+        accum = grad_accum or ACCUM_OVERRIDES.get((arch_id, shape_id), cfg.grad_accum)
+        # microbatches must stay shardable over the full DP extent
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_total = sizes.get("pod", 1) * sizes.get("data", 1)
+        accum = max(1, min(accum, shape.global_batch // dp_total))
+        opt = AdamW(lr=warmup_cosine(3e-4, 100, 10_000))
+        ostate = jax.eval_shape(opt.init, pshapes)
+        oshard = _tree_shardings(
+            mesh, opt.state_axes(paxes),
+            {"m": pshapes, "v": pshapes, "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        )
+        bshapes, baxes = batch_specs(cfg, shape, with_labels=True)
+        bshard = {
+            k: _named(mesh, logical_to_spec(baxes[k], v.shape, mesh))
+            for k, v in bshapes.items()
+        }
+        step = make_train_step(model, opt, mesh=mesh, grad_accum=accum)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, repl),
+            donate_argnums=(0, 1),
+        )
+        return Cell(arch_id, shape_id, cfg, jitted, (pshapes, ostate, bshapes), "train", mesh)
+
+    if shape.kind == "prefill":
+        bshapes, baxes = batch_specs(cfg, shape, with_labels=False)
+        bshard = {
+            k: _named(mesh, logical_to_spec(baxes[k], v.shape, mesh))
+            for k, v in bshapes.items()
+        }
+        fwd = functools.partial(_prefill_fn, model=model, mesh=mesh)
+        jitted = jax.jit(
+            fwd,
+            in_shardings=(pshard, bshard),
+            out_shardings=_named(
+                mesh,
+                logical_to_spec(
+                    ("batch", None, "act_vocab"),
+                    (shape.global_batch, 1, cfg.padded_vocab),
+                    mesh,
+                ),
+            ),
+        )
+        return Cell(arch_id, shape_id, cfg, jitted, (pshapes, bshapes), "prefill", mesh)
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    holder = {}
+
+    def cache_init():
+        c, a = model.decode_init(B, S)
+        holder["axes"] = a
+        return c
+
+    cshapes = jax.eval_shape(cache_init)
+    cshard = _tree_shardings(mesh, holder["axes"], cshapes)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tshard = _named(mesh, logical_to_spec(("batch", None), (B, 1), mesh))
+    dstep = functools.partial(_decode_fn, model=model, mesh=mesh)
+    jitted = jax.jit(
+        dstep,
+        in_shardings=(pshard, cshard, tshard, repl),
+        out_shardings=(
+            _named(mesh, logical_to_spec(("batch", "act_vocab"), (B, cfg.padded_vocab), mesh)),
+            cshard,
+        ),
+        donate_argnums=(1,),
+    )
+    return Cell(arch_id, shape_id, cfg, jitted, (pshapes, cshapes, token, pos), "decode", mesh)
+
+
+def _prefill_fn(params, batch, *, model, mesh):
+    return model.forward(params, batch, mesh)
+
+
+def _decode_fn(params, caches, token, pos, *, model, mesh):
+    return model.decode_step(params, caches, token, pos, mesh)

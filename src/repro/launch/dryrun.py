@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture × input shape) cell on the
+production meshes — single-pod 16×16 (data, model) and multi-pod 2×16×16
+(pod, data, model) — and records memory analysis, cost analysis and the
+HLO-derived roofline terms to JSON (read by EXPERIMENTS.md §Dry-run and
+benchmarks/roofline.py).
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks the
+device count at first init); nothing else in the repo sets this flag.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from .cells import build_cell
+from .hlo_analysis import analyze_compiled
+from .mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save_hlo: bool = False, grad_accum=None, sp: bool = False) -> dict:
+    import dataclasses as _dc
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {
+        "arch": arch + ("+sp" if sp else ""), "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    try:
+        cfg = None
+        if sp:
+            cfg = _dc.replace(get_config(arch), seq_shard_activations=True)
+        cell = build_cell(arch, shape, mesh, grad_accum=grad_accum, cfg=cfg)
+        lowered = cell.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        rec.update(analyze_compiled(compiled))
+        mem = compiled.memory_analysis()
+        print(f"[{arch} × {shape} × {rec['mesh']}] compiled in "
+              f"{rec['compile_s']}s")
+        print("  memory_analysis:", mem)
+        ca = compiled.cost_analysis()
+        print("  cost_analysis flops (one loop iter, see hlo_analysis):",
+              ca.get("flops"))
+        print(f"  flops/device={rec['flops_per_device']:.3e} "
+              f"hbm_bytes/device={rec['hbm_bytes_per_device']:.3e} "
+              f"collective_bytes/device={rec['collective_bytes_per_device']:.3e}")
+        if save_hlo:
+            RESULTS.mkdir(exist_ok=True)
+            (RESULTS / f"hlo_{arch}_{shape}_{rec['mesh']}.txt").write_text(
+                compiled.as_text()
+            )
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[{arch} × {shape} × {rec['mesh']}] FAILED: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual stream variant")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dryrun needs 512 placeholder devices"
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                records.append(
+                    run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                             grad_accum=args.grad_accum, sp=args.sp)
+                )
+    RESULTS.mkdir(exist_ok=True)
+    out = Path(args.out) if args.out else RESULTS / "dryrun.json"
+    existing = []
+    if out.exists():
+        existing = json.loads(out.read_text())
+        keys = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r["mesh"]) not in keys]
+    out.write_text(json.dumps(existing + records, indent=1))
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors -> {out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+"""Roofline terms from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (constants given by the brief).
+
+For each (arch × shape × mesh) record from results/dryrun.json:
+  T_comp = FLOPs / (chip peak)          [per-device FLOPs from the HLO]
+  T_mem  = HBM bytes / (HBM bw)          [per-device, loop-expanded]
+  T_coll = collective bytes / (link bw)  [per-device wire bytes]
+plus MODEL_FLOPS = 6·N·D (active-N for MoE; decode: D = tokens decoded)
+and the usefulness ratio MODEL_FLOPS / (chips × HLO_FLOPs_per_device).
+
+Caveats (documented for honesty):
+  * the HBM term is an upper-bound proxy — it counts operands+results of
+    every scheduled kernel in the CPU-partitioned HLO; real TPU fusion
+    would cut it.  It is consistent across cells and iterations, which is
+    what the hillclimb needs.
+  * peak FLOP/s assumes bf16 MXU work; f32 reductions run slower, so
+    T_comp is optimistic for f32-heavy cells.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with active params for MoE; decode steps count 1 token."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_row(rec: Dict, cfg=None, shape=None) -> Dict:
+    chips = rec["chips"]
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["hbm_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll,
+        "dominant": dominant,
+        "bound_time_s": max(t_comp, t_mem, t_coll),
+        "roofline_fraction": t_comp / max(t_comp, t_mem, t_coll, 1e-30),
+        "peak_hbm_gb": rec.get("peak_bytes", 0) / 2**30,
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        out["model_flops"] = mf
+        out["useful_ratio"] = mf / max(chips * rec["flops_per_device"], 1e-30)
+        out["mfu_upper_bound"] = mf / (
+            chips * PEAK_FLOPS * max(t_comp, t_mem, t_coll, 1e-30)
+        )
+    return out
+
+
+def build_table(dryrun_json: Optional[Path] = None) -> List[Dict]:
+    from ..configs import get_config, get_shape
+
+    path = dryrun_json or (RESULTS / "dryrun.json")
+    rows = []
+    for rec in json.loads(path.read_text()):
+        if rec.get("status") != "ok":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": rec["status"],
+                "reason": rec.get("reason", rec.get("error", ""))[:90],
+            })
+            continue
+        cfg = get_config(rec["arch"].split("+")[0])  # variants: "arch+sp"
+        shape = get_shape(rec["shape"])
+        row = roofline_row(rec, cfg, shape)
+        row["status"] = "ok"
+        rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24}{'shape':13}{'mesh':9}{'T_comp':>9}{'T_mem':>9}"
+           f"{'T_coll':>9}{'bound':>11}{'MFU_ub':>8}{'useful':>8}{'HBM_GB':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(
+                f"{r['arch']:24}{r['shape']:13}{r['mesh']:9}"
+                f"  [{r['status']}] {r.get('reason','')}"
+            )
+            continue
+        lines.append(
+            f"{r['arch']:24}{r['shape']:13}{r['mesh']:9}"
+            f"{r['t_comp_s']:9.3f}{r['t_mem_s']:9.3f}{r['t_coll_s']:9.3f}"
+            f"{r['dominant']:>11}{r.get('mfu_upper_bound', 0):8.3f}"
+            f"{r.get('useful_ratio', 0):8.3f}{r['peak_hbm_gb']:8.1f}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = build_table()
+    print(format_table(rows))
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

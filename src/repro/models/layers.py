@@ -1,0 +1,157 @@
+"""Common layers: norms, RoPE, MLPs, embeddings, param declaration.
+
+Parameters are plain nested dicts of arrays; every init function returns a
+matching tree of *logical axis tuples* used by ``repro.sharding`` to derive
+PartitionSpecs.  Layer stacks are built by vmapping init over a leading
+``layers`` axis so the forward pass can ``lax.scan`` over them.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------- #
+# param declaration
+# --------------------------------------------------------------------- #
+def declare(key, decls: Dict[str, Tuple[Tuple[int, ...], Tuple, float]],
+            dtype=jnp.float32):
+    """decls: name -> (shape, logical_axes, init_std). std 0 => zeros,
+    std < 0 => constant |std|."""
+    params, axes = {}, {}
+    keys = jax.random.split(key, max(len(decls), 1))
+    for (name, (shape, ax, std)), k in zip(decls.items(), keys):
+        if std == 0.0:
+            params[name] = jnp.zeros(shape, dtype)
+        elif std < 0.0:
+            params[name] = jnp.full(shape, -std, dtype)
+        else:
+            params[name] = jax.random.normal(k, shape, dtype) * std
+        axes[name] = ax
+    return params, axes
+
+
+def fan_in_std(fan_in: int) -> float:
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# rotary position embeddings
+# --------------------------------------------------------------------- #
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """x: (..., seq, head_dim); positions: (..., seq) int; theta scalar or
+    traced scalar (per-layer inside scans)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = jnp.exp(
+        -jnp.log(jnp.asarray(theta, jnp.float32))
+        * (jnp.arange(half, dtype=jnp.float32) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------- #
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    return declare(key, {
+        "w_gate": ((d_model, d_ff), ("embed", "mlp"), fan_in_std(d_model)),
+        "w_up": ((d_model, d_ff), ("embed", "mlp"), fan_in_std(d_model)),
+        "w_down": ((d_ff, d_model), ("mlp", "embed"), fan_in_std(d_ff)),
+    }, dtype)
+
+
+def swiglu(p, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    g = jnp.einsum("...e,ef->...f", x, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("...e,ef->...f", x, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return jnp.einsum("...f,fe->...e", h, p["w_down"].astype(compute_dtype))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    return declare(key, {
+        "w_in": ((d_model, d_ff), ("embed", "mlp"), fan_in_std(d_model)),
+        "b_in": ((d_ff,), ("mlp",), 0.0),
+        "w_out": ((d_ff, d_model), ("mlp", "embed"), fan_in_std(d_ff)),
+        "b_out": ((d_model,), ("embed_r",), 0.0),
+    }, dtype)
+
+
+def gelu_mlp(p, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    h = jnp.einsum("...e,ef->...f", x, p["w_in"].astype(compute_dtype))
+    h = jax.nn.gelu((h + p["b_in"].astype(compute_dtype)).astype(jnp.float32))
+    out = jnp.einsum("...f,fe->...e", h.astype(compute_dtype),
+                     p["w_out"].astype(compute_dtype))
+    return out + p["b_out"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------------- #
+# embeddings / heads
+# --------------------------------------------------------------------- #
+def init_embedding(key, vocab_padded: int, d_model: int, dtype=jnp.float32):
+    # table replicated over data, sharded over model on the embed dim so the
+    # token gather stays local (DESIGN.md §4)
+    return declare(key, {
+        "table": ((vocab_padded, d_model), (None, "act_mlp"), 1.0),
+    }, dtype)
+
+
+def embed(p, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    # pin shardings around the gather: tokens replicated over `model`,
+    # output sharded on the embed dim (matches the table) — leaving this
+    # to sharding propagation trips an SPMD partitioner bug (invalid
+    # dynamic-slice) when the gather sits under jvp + microbatching.
+    from ..sharding import shard_activation
+
+    tokens = shard_activation(tokens, ("batch", None))
+    out = jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+    return shard_activation(out, ("batch", None, "act_mlp"))
+
+
+def init_lm_head(key, d_model: int, vocab_padded: int, dtype=jnp.float32):
+    return declare(key, {
+        "w": ((d_model, vocab_padded), ("embed_r", "vocab"), fan_in_std(d_model)),
+    }, dtype)
+
+
+def lm_head(p, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.einsum("...e,ev->...v", x, p["w"].astype(compute_dtype))
+
+
+def stack_layers(init_fn, key, n_layers: int):
+    """vmap an init over a leading layers axis; returns (params, axes) with
+    the ``layers`` logical axis prepended to every leaf."""
+    keys = jax.random.split(key, n_layers)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)
+    axes = jax.tree.map(
+        lambda ax: ("layers",) + ax,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+    return params, axes

@@ -1,0 +1,52 @@
+"""``--arch <id>`` -> unified model API (init / loss / forward / decode)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from . import encdec as ED
+from . import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: Any
+    init: Callable          # (key) -> (params, axes)
+    loss: Callable           # (params, batch, mesh) -> (loss, metrics)
+    forward: Callable        # (params, batch, mesh) -> logits  (prefill)
+    decode_init: Callable    # (batch, kv_len) -> (caches, axes)
+    decode_step: Callable    # (params, caches, token, pos, mesh) -> (logits, caches)
+
+
+def build_model(cfg) -> ModelAPI:
+    if cfg.family == "audio":
+        def fwd(params, batch, mesh=None):
+            enc = ED.encode(params, cfg, batch["frames"], mesh)
+            return ED.decode_train(params, cfg, batch["tokens"], enc, mesh)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: ED.init_encdec(cfg, key),
+            loss=lambda params, batch, mesh=None: ED.encdec_loss(params, cfg, batch, mesh),
+            forward=fwd,
+            decode_init=lambda batch, kv_len: ED.init_decode_state(cfg, batch, kv_len),
+            decode_step=lambda params, caches, token, pos, mesh=None, active=None:
+                ED.encdec_decode_step(params, cfg, caches, token, pos, mesh, active),
+        )
+
+    def fwd(params, batch, mesh=None):
+        logits, _, n_prefix = T.lm_forward(
+            params, cfg, batch["tokens"], mesh, batch.get("patches")
+        )
+        return logits
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: T.init_lm(cfg, key),
+        loss=lambda params, batch, mesh=None: T.lm_loss(params, cfg, batch, mesh),
+        forward=fwd,
+        decode_init=lambda batch, kv_len: T.init_decode_state(cfg, batch, kv_len),
+        decode_step=lambda params, caches, token, pos, mesh=None, active=None:
+            T.lm_decode_step(params, cfg, caches, token, pos, mesh, active),
+    )

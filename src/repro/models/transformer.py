@@ -1,0 +1,318 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+Training/prefill scans over a stacked layer tree (compile time flat in
+depth — required for 80-layer configs lowered at 512 SPMD partitions), with
+per-layer metadata arrays (RoPE theta, window) riding the scan so Gemma-3's
+5:1 local:global pattern stays a uniform stack.  Decode unrolls a Python
+loop over layers so per-layer cache shapes can differ (window-sized caches
+for local layers — what makes long-context decode fit HBM).
+
+The cross-entropy never materialises replicated logits: the head output
+stays vocab-sharded; logsumexp and the label-pick reduce over the sharded
+axis (small all-reduces under GSPMD).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard_activation
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _init_layer(key, cfg, dtype):
+    fam = cfg.family
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    ks = jax.random.split(key, 8)
+
+    def add(name, sub):
+        p, a = sub
+        params[name] = p
+        axes[name] = a
+
+    if fam in ("dense", "vlm", "moe", "hybrid"):
+        add("attn", A.init_attention(ks[0], cfg, dtype))
+        add("ln_attn", L.declare(ks[1], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype))
+    if fam in ("dense", "vlm"):
+        add("mlp", L.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dtype))
+        add("ln_mlp", L.declare(ks[3], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype))
+    if fam == "moe":
+        add("moe", M.init_moe(ks[2], cfg, dtype))
+        add("ln_mlp", L.declare(ks[3], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype))
+    if fam in ("ssm", "hybrid"):
+        add("ssm", S.init_mamba2(ks[4], cfg, dtype))
+        add("ln_ssm", L.declare(ks[5], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype))
+    if fam == "hybrid":
+        add("mlp", L.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dtype))
+        add("ln_mlp", L.declare(ks[3], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype))
+        add("comb", L.declare(ks[6], {
+            "norm_attn": ((cfg.d_model,), ("embed_r",), 0.0),
+            "norm_ssm": ((cfg.d_model,), ("embed_r",), 0.0),
+        }, dtype))
+    return params, axes
+
+
+def layer_metadata(cfg) -> Dict[str, jnp.ndarray]:
+    """Per-layer (theta, window) arrays; window -1 = full attention."""
+    n = cfg.n_layers
+    theta = jnp.full((n,), cfg.rope_theta, jnp.float32)
+    window = jnp.full((n,), -1, jnp.int32)
+    if cfg.local_global_pattern is not None:
+        loc, glob = cfg.local_global_pattern
+        period = loc + glob
+        is_global = (jnp.arange(n) % period) == (period - 1)
+        window = jnp.where(is_global, -1, cfg.window)
+        if cfg.rope_theta_global is not None:
+            theta = jnp.where(is_global, cfg.rope_theta_global, cfg.rope_theta)
+    elif cfg.window is not None:
+        window = jnp.full((n,), cfg.window, jnp.int32)
+    return {"theta": theta, "window": window}
+
+
+def init_lm(cfg, key) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    dtype = L.dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+
+    p, a = L.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype)
+    params["embed"], axes["embed"] = p, a
+
+    lp, la = L.stack_layers(lambda k: _init_layer(k, cfg, dtype), k_layers, cfg.n_layers)
+    params["layers"], axes["layers"] = lp, la
+
+    p, a = L.declare(k_head, {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
+    params["ln_f"], axes["ln_f"] = p, a
+    if not cfg.tie_embeddings:
+        p, a = L.init_lm_head(k_head, cfg.d_model, cfg.padded_vocab, dtype)
+        params["head"], axes["head"] = p, a
+    if cfg.family == "vlm":
+        p, a = L.declare(k_extra, {
+            "w": ((cfg.d_vision, cfg.d_model), (None, "act_mlp"),
+                  L.fan_in_std(cfg.d_vision)),
+        }, dtype)
+        params["vision_proj"], axes["vision_proj"] = p, a
+    return params, axes
+
+
+# --------------------------------------------------------------------- #
+# layer forward (shared between scan body and decode loop)
+# --------------------------------------------------------------------- #
+def _layer_fwd(lp, x, cfg, meta, compute_dtype, mesh):
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "vlm", "moe"):
+        h = L.rms_norm(x, lp["ln_attn"]["w"], cfg.norm_eps)
+        x = x + A.attention_block(
+            lp["attn"], h, cfg, theta=meta["theta"], window=meta["window"],
+            compute_dtype=compute_dtype,
+        )
+        h = L.rms_norm(x, lp["ln_mlp"]["w"], cfg.norm_eps)
+        if fam == "moe":
+            y, aux = M.moe_block(lp["moe"], h, cfg, compute_dtype, mesh)
+            x = x + y
+        else:
+            x = x + L.swiglu(lp["mlp"], h, compute_dtype)
+    elif fam == "ssm":
+        h = L.rms_norm(x, lp["ln_ssm"]["w"], cfg.norm_eps)
+        x = x + S.mamba2_block(lp["ssm"], h, cfg, compute_dtype)
+    elif fam == "hybrid":
+        h = L.rms_norm(x, lp["ln_attn"]["w"], cfg.norm_eps)
+        att = A.attention_block(
+            lp["attn"], h, cfg, theta=meta["theta"], window=meta["window"],
+            compute_dtype=compute_dtype,
+        )
+        ssm = S.mamba2_block(lp["ssm"], h, cfg, compute_dtype)
+        x = x + 0.5 * (
+            L.rms_norm(att, lp["comb"]["norm_attn"], cfg.norm_eps)
+            + L.rms_norm(ssm, lp["comb"]["norm_ssm"], cfg.norm_eps)
+        )
+        h = L.rms_norm(x, lp["ln_mlp"]["w"], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h, compute_dtype)
+    else:
+        raise ValueError(fam)
+    seq_ax = "act_seq" if cfg.seq_shard_activations else None
+    x = shard_activation(x, ("batch", seq_ax, "act_embed"))
+    return x, aux
+
+
+# --------------------------------------------------------------------- #
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------- #
+def lm_forward(params, cfg, tokens, mesh=None, patches=None,
+               return_hidden: bool = False):
+    compute_dtype = L.dtype_of(cfg.dtype)
+    x = L.embed(params["embed"], tokens, compute_dtype)
+    n_prefix = 0
+    if cfg.family == "vlm" and patches is not None:
+        vis = jnp.einsum(
+            "bpe,ed->bpd", patches.astype(compute_dtype),
+            params["vision_proj"]["w"].astype(compute_dtype),
+        )
+        x = jnp.concatenate([vis, x], axis=1)
+        n_prefix = vis.shape[1]
+    x = shard_activation(x, ("batch", None, "act_embed"))
+    meta = layer_metadata(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, m = xs
+        x, a = _layer_fwd(lp, x, cfg, m, compute_dtype, mesh)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], meta)
+    )
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux, n_prefix
+    logits = _head(params, cfg, x, compute_dtype)
+    return logits, aux, n_prefix
+
+
+def _head(params, cfg, x, compute_dtype):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(compute_dtype).T
+        logits = jnp.einsum("bse,ev->bsv", x, w)
+    else:
+        logits = L.lm_head(params["head"], x, compute_dtype)
+    return shard_activation(logits, ("batch", None, "act_vocab"))
+
+
+def lm_loss(params, cfg, batch, mesh=None):
+    """Mean next-token CE over valid (label >= 0) positions + MoE aux."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    patches = batch.get("patches")
+    logits, aux, n_prefix = lm_forward(params, cfg, tokens, mesh, patches)
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    ce, denom = _ce(logits, labels, cfg)
+    loss = ce / denom + 0.01 * aux
+    return loss, {"ce": ce / denom, "aux": aux, "tokens": denom}
+
+
+def _ce(logits, labels, cfg):
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.sum(
+        jnp.where(iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    valid = labels >= 0
+    ce = jnp.sum(jnp.where(valid, lse - picked, 0.0))
+    denom = jnp.maximum(jnp.sum(valid), 1).astype(jnp.float32)
+    return ce, denom
+
+
+# --------------------------------------------------------------------- #
+# decode: per-layer python loop with per-layer cache shapes
+# --------------------------------------------------------------------- #
+def _layer_meta_py(cfg, i: int) -> Dict[str, Any]:
+    theta, window = cfg.rope_theta, cfg.window
+    if cfg.local_global_pattern is not None:
+        loc, glob = cfg.local_global_pattern
+        is_global = (i % (loc + glob)) == (loc + glob - 1)
+        window = None if is_global else cfg.window
+        if is_global and cfg.rope_theta_global is not None:
+            theta = cfg.rope_theta_global
+    return {"theta": theta, "window": window}
+
+
+def init_decode_state(cfg, batch: int, kv_len: int):
+    """Per-layer cache list; window layers get window-sized caches."""
+    dtype = L.dtype_of(cfg.dtype)
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    caches: List[Dict[str, Any]] = []
+    axes: List[Dict[str, Any]] = []
+    kv_axes = ("cache_batch", "kv_heads", "cache_seq", "head_dim")
+    for i in range(cfg.n_layers):
+        meta = _layer_meta_py(cfg, i)
+        c: Dict[str, Any] = {}
+        a: Dict[str, Any] = {}
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            S_i = kv_len if meta["window"] is None else min(meta["window"], kv_len)
+            shape = (batch, Hkv, S_i, Dh)
+            c["k"], c["v"] = jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+            a["k"] = a["v"] = kv_axes
+        if cfg.family in ("ssm", "hybrid"):
+            sc, sa = S.init_ssm_cache(cfg, batch, dtype)
+            c["ssm"], a["ssm"] = sc, sa
+        caches.append(c)
+        axes.append(a)
+    return caches, axes
+
+
+def lm_decode_step(params, cfg, caches, token, pos, mesh=None, active=None):
+    """token: (b, 1) int32; pos: scalar or (b,) int32; active: optional
+    (b,) bool mask (continuous batching) -> (logits (b, vp), caches)."""
+    compute_dtype = L.dtype_of(cfg.dtype)
+    x = L.embed(params["embed"], token, compute_dtype)
+    # weight-stationary decode: activations carry the FSDP (data) shard of
+    # the embed dim so each layer contracts against its local weight shard
+    # (all-reduce of (b,1,·) partials) instead of all-gathering GBs of
+    # weights per token — §Perf iteration 2
+    x = shard_activation(x, (None, None, "act_decode_embed"))
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda v: v[i], params["layers"])
+        meta = _layer_meta_py(cfg, i)
+        c = dict(caches[i])
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            h = L.rms_norm(x, lp["ln_attn"]["w"], cfg.norm_eps)
+            windowed = meta["window"] is not None and c["k"].shape[2] <= meta["window"]
+            y, c["k"], c["v"] = A.decode_attention_block(
+                lp["attn"], h, c["k"], c["v"], pos, cfg,
+                theta=meta["theta"], window=meta["window"],
+                compute_dtype=compute_dtype, windowed_cache=windowed,
+                active=active,
+            )
+            x = x + y
+            h = L.rms_norm(x, lp["ln_mlp"]["w"], cfg.norm_eps)
+            if fam == "moe":
+                y, _ = M.moe_block(lp["moe"], h, cfg, compute_dtype, mesh)
+                x = x + y
+            else:
+                x = x + L.swiglu(lp["mlp"], h, compute_dtype)
+        elif fam == "ssm":
+            h = L.rms_norm(x, lp["ln_ssm"]["w"], cfg.norm_eps)
+            y, c["ssm"] = S.mamba2_decode(lp["ssm"], h, c["ssm"], cfg, compute_dtype,
+                                          active=active)
+            x = x + y
+        elif fam == "hybrid":
+            h = L.rms_norm(x, lp["ln_attn"]["w"], cfg.norm_eps)
+            windowed = meta["window"] is not None and c["k"].shape[2] <= meta["window"]
+            att, c["k"], c["v"] = A.decode_attention_block(
+                lp["attn"], h, c["k"], c["v"], pos, cfg,
+                theta=meta["theta"], window=meta["window"],
+                compute_dtype=compute_dtype, windowed_cache=windowed,
+                active=active,
+            )
+            ssm, c["ssm"] = S.mamba2_decode(lp["ssm"], h, c["ssm"], cfg, compute_dtype,
+                                            active=active)
+            x = x + 0.5 * (
+                L.rms_norm(att, lp["comb"]["norm_attn"], cfg.norm_eps)
+                + L.rms_norm(ssm, lp["comb"]["norm_ssm"], cfg.norm_eps)
+            )
+            h = L.rms_norm(x, lp["ln_mlp"]["w"], cfg.norm_eps)
+            x = x + L.swiglu(lp["mlp"], h, compute_dtype)
+        x = shard_activation(x, (None, None, "act_decode_embed"))
+        new_caches.append(c)
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    logits = _head(params, cfg, x, compute_dtype)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,1 @@
+from .adamw import AdamW, warmup_cosine  # noqa: F401

@@ -1,0 +1,76 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup-cosine schedule.  Optimizer state mirrors the parameter tree (same
+logical axes ⇒ same sharding: ZeRO-style sharded optimizer for free)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda t: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), t
+        )
+        return {"m": zeros(params), "v": zeros(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_axes(self, param_axes) -> Dict[str, Any]:
+        return {"m": param_axes, "v": param_axes, "step": ()}
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+        step = state["step"] + 1
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        ))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            new_p = p.astype(jnp.float32) - lr * (
+                delta + self.weight_decay * p.astype(jnp.float32)
+            )
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

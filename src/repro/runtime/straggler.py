@@ -1,0 +1,47 @@
+"""Straggler detection: per-host EWMA step times with robust outlier test.
+
+A host is flagged when its smoothed step time exceeds
+``threshold × median(EWMA over hosts)`` for ``patience`` consecutive
+steps.  The driver can then exclude the host (elastic re-mesh) or, for
+data-pipeline stragglers, re-assign its shard (``reassign``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, alpha: float = 0.2,
+                 threshold: float = 1.8, patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self._ewma: Dict[int, float] = {h: float("nan") for h in range(n_hosts)}
+        self._breach: Dict[int, int] = {h: 0 for h in range(n_hosts)}
+
+    def record(self, host_id: int, step_time_s: float) -> None:
+        prev = self._ewma[host_id]
+        self._ewma[host_id] = (
+            step_time_s if np.isnan(prev)
+            else self.alpha * step_time_s + (1 - self.alpha) * prev
+        )
+
+    def update_breaches(self) -> None:
+        vals = [v for v in self._ewma.values() if not np.isnan(v)]
+        if len(vals) < 2:
+            return
+        med = float(np.median(vals))
+        for h, v in self._ewma.items():
+            if not np.isnan(v) and v > self.threshold * med:
+                self._breach[h] += 1
+            else:
+                self._breach[h] = 0
+
+    def stragglers(self) -> List[int]:
+        return sorted(h for h, b in self._breach.items() if b >= self.patience)
+
+    def ewma(self, host_id: int) -> float:
+        return self._ewma[host_id]

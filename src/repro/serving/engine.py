@@ -1,0 +1,148 @@
+"""Batched serving engine: prefill + decode over a shared KV cache, with
+optional dynamic-DBSCAN request clustering.
+
+Continuous-batching-style loop for a fixed batch width B:
+  * incoming requests queue up; free slots are filled by prefilling the
+    request's prompt into the slot's cache region;
+  * one fused decode step advances every active slot by a token;
+  * finished slots (EOS / max_len) are released.
+
+Request clustering (the paper's technique on the serving side): request
+embeddings are clustered online; the scheduler can batch same-cluster
+requests together (prefix/topic locality) and expire old requests from the
+window — again the paper's insert+delete workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batched import BatchedDynamicDBSCAN
+from ..models.registry import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new_tokens: int = 16
+    embedding: Optional[np.ndarray] = None
+    out_tokens: Optional[List[int]] = None
+    cluster: Optional[int] = None
+
+
+class ServingEngine:
+    def __init__(self, model: ModelAPI, params, batch: int, kv_len: int,
+                 eos_id: int = -1, cluster_requests: bool = False,
+                 embed_dim: int = 8, mesh=None):
+        self.model = model
+        self.params = params
+        self.B = batch
+        self.kv_len = kv_len
+        self.eos = eos_id
+        self.mesh = mesh
+        self.caches, _ = model.decode_init(batch, kv_len)
+        self._step = jax.jit(
+            lambda p, c, t, pos, act: model.decode_step(
+                p, c, t, pos, mesh, active=act
+            )
+        )
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.slot_pos = np.zeros(batch, dtype=np.int64)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.clusterer = (
+            BatchedDynamicDBSCAN(embed_dim, k=4, t=6, eps=0.6)
+            if cluster_requests else None
+        )
+        self._req_window: List[int] = []
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.out_tokens = []
+        if self.clusterer is not None and req.embedding is not None:
+            idx = self.clusterer.add_batch(req.embedding[None])[0]
+            req.cluster = self.clusterer.get_cluster(idx)
+            self._req_window.append(idx)
+            if len(self._req_window) > 4 * self.B:
+                self.clusterer.delete_point(self._req_window.pop(0))
+        self.queue.append(req)
+
+    def _schedule(self) -> None:
+        """Fill free slots; prefer same-cluster requests (locality)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        if self.clusterer is not None:
+            active = [s.cluster for s in self.slots if s is not None]
+            self.queue.sort(
+                key=lambda r: (r.cluster not in active, r.rid)
+            )
+        for i in free:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self._prefill(i, req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Teacher-force the prompt through the decode path one token at a
+        time (simple, exact; a production engine would run a fused prefill
+        kernel into the cache region)."""
+        self.slots[slot] = req
+        self.slot_pos[slot] = 0
+        for t, tok in enumerate(req.prompt[:-1]):
+            self._advance_slot(slot, int(tok))
+        req._next = int(req.prompt[-1])
+
+    def _advance_slot(self, slot: int, token: int) -> None:
+        tokens = np.zeros((self.B, 1), dtype=np.int32)
+        tokens[slot, 0] = token
+        mask = np.zeros((self.B,), dtype=bool)
+        mask[slot] = True
+        _, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.slot_pos.astype(np.int32)), jnp.asarray(mask),
+        )
+        self.slot_pos[slot] += 1
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One fused decode step for all active slots; returns #active."""
+        self._schedule()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.B, 1), dtype=np.int32)
+        mask = np.zeros((self.B,), dtype=bool)
+        for i in active:
+            tokens[i, 0] = self.slots[i]._next
+            mask[i] = True
+        logits, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.slot_pos.astype(np.int32)), jnp.asarray(mask),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            req._next = tok
+            self.slot_pos[i] += 1
+            if (tok == self.eos or len(req.out_tokens) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.kv_len - 1):
+                self.done[req.rid] = req
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.done

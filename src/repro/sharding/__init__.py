@@ -1,0 +1,6 @@
+from .axes import (  # noqa: F401
+    LOGICAL_RULES,
+    logical_to_spec,
+    shard_activation,
+    spec_tree,
+)

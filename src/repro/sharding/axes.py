@@ -1,0 +1,136 @@
+"""Logical-axis sharding (MaxText-style) with divisibility guards.
+
+Every parameter/activation dimension carries a *logical* name; rules map
+logical names to mesh axes.  A mesh axis is applied only when the dimension
+size divides the axis extent — otherwise the dim stays replicated (e.g.
+Hymba's 25 heads or Whisper's 12 heads on a 16-wide ``model`` axis), which
+keeps every assigned architecture lowerable on the production mesh without
+per-arch hand-tuning.
+
+Parallelism map (mesh axes ``pod``, ``data``, ``model``):
+  DP   : ``batch -> (pod, data)``
+  FSDP : ``embed -> data``  (ZeRO-3: params+optimizer sharded over DP)
+  TP   : ``heads/kv_heads/mlp/vocab -> model``
+  EP   : ``experts -> model``
+  SP   : ``cache_seq -> model`` (sequence-sharded decode attention)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None)
+LOGICAL_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",        # FSDP shard of the contracting dim
+    "embed_r": None,        # replicated variant (embedding/head tables)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "layers": None,
+    "groups": None,
+    "conv": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "cache_batch": ("pod", "data"),
+    "cache_seq": "model",
+    "patch": None,
+    "frames": None,
+    "act_embed": None,      # activation d_model dim (replicated by default)
+    "act_decode_embed": "data",  # decode: embed-sharded activations so the
+                                 # FSDP weights are consumed shard-local
+                                 # (partial-sum all-reduce ≪ weight gather)
+    "act_seq": "model",     # sequence-parallel residual stream (opt-in)
+    "act_mlp": "model",     # activation ff dim under TP
+    "act_heads": "model",
+    "act_vocab": "model",
+}
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    dims: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Any]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec, dropping mesh axes
+    that don't divide the dimension or don't exist in the mesh."""
+    rules = rules if rules is not None else LOGICAL_RULES
+    sizes = _mesh_sizes(mesh)
+    used = set()
+    out = []
+    for name, dim in zip(logical_axes, dims):
+        if name is None:
+            out.append(None)
+            continue
+        assigned = rules.get(name)
+        if assigned is None:
+            out.append(None)
+            continue
+        axes = assigned if isinstance(assigned, tuple) else (assigned,)
+        keep = []
+        extent = 1
+        for ax in axes:
+            if ax not in sizes or ax in used:
+                continue
+            if dim % (extent * sizes[ax]) == 0:
+                keep.append(ax)
+                extent *= sizes[ax]
+        for ax in keep:
+            used.add(ax)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def spec_tree(
+    axes_tree: Any, shape_tree: Any, mesh: Mesh,
+    rules: Optional[Dict[str, Any]] = None,
+) -> Any:
+    """Map a tree of logical-axes tuples + a matching tree of shapes to a
+    tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, shp: logical_to_spec(axes, shp.shape, mesh, rules),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def shard_activation(x, logical_axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical names (no-op outside a mesh)."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return m
+    except Exception:  # pragma: no cover
+        return None

@@ -1,0 +1,1 @@
+from .steps import make_train_step  # noqa: F401

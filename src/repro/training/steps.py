@@ -1,0 +1,92 @@
+"""Training step: remat'd forward/backward, microbatch gradient
+accumulation (lax.scan), global-norm clipping, AdamW update.
+
+Gradient accumulation both bounds live activation memory and gives XLA a
+window to overlap the per-microbatch gradient reductions with the next
+microbatch's backward pass (the standard pjit compute/comm overlap).
+Optional gradient compression (repro.distributed.compression) hooks in
+between accumulation and the optimizer update.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import ModelAPI
+
+
+def _split_microbatches(batch: Dict[str, Any], accum: int):
+    def resh(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return {k: resh(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    model: ModelAPI,
+    optimizer,
+    mesh=None,
+    grad_accum: Optional[int] = None,
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    cfg = model.cfg
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, mesh)
+        return loss, metrics
+
+    # shard_map (MoE expert parallelism) inside a scanned accumulation loop
+    # trips an XLA SPMD partitioner bug (slice-size verifier failure); MoE
+    # families use an unrolled accumulation loop instead.
+    unrolled_accum = False  # (XLA scan+shard_map bug no longer triggers with seq-split dispatch)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            mbs = _split_microbatches(batch, accum)
+
+            def mb_step(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            carry = (g0, jnp.zeros((), jnp.float32))
+            if unrolled_accum:
+                for i in range(accum):
+                    mb = {k: v[i] for k, v in mbs.items()}
+                    carry, _ = mb_step(carry, mb)
+                grads, loss_sum = carry
+            else:
+                (grads, loss_sum), _ = jax.lax.scan(mb_step, carry, mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics: Dict[str, Any] = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params
+        )
+        out = {"loss": loss, **opt_metrics}
+        for k, v in (metrics or {}).items():
+            out[k] = v
+        return new_params, new_opt, out
+
+    return train_step

@@ -1,0 +1,51 @@
+"""Deliverable (e) gate: the recorded dry-run must cover every
+(architecture × shape × mesh) cell with status ok or a documented skip,
+and the roofline table must derive cleanly from it."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+
+
+@pytest.mark.skipif(not RESULTS.exists(), reason="run repro.launch.dryrun first")
+def test_dryrun_covers_all_cells_on_both_meshes():
+    recs = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in json.loads(RESULTS.read_text())}
+    missing, failed = [], []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    missing.append((arch, shape, mesh))
+                    continue
+                supported, _ = cell_supported(arch, shape)
+                if supported:
+                    if r["status"] != "ok":
+                        failed.append((arch, shape, mesh, r.get("error", "")[:80]))
+                else:
+                    if r["status"] != "skipped":
+                        failed.append((arch, shape, mesh, "expected documented skip"))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+@pytest.mark.skipif(not RESULTS.exists(), reason="run repro.launch.dryrun first")
+def test_roofline_terms_sane():
+    from repro.launch.roofline import build_table
+
+    rows = [r for r in build_table() if r.get("status") == "ok"]
+    assert len(rows) >= 60
+    for r in rows:
+        assert r["t_comp_s"] > 0
+        assert r["t_mem_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        if r["shape"] == "train_4k":
+            # a train step should involve nontrivial compute
+            assert r["t_comp_s"] > 0.01, r
+        assert 0 < r.get("useful_ratio", 1) < 10, r

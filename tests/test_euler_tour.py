@@ -1,0 +1,181 @@
+"""Randomized oracle tests for the skip-list Euler Tour forest."""
+
+import random
+
+import pytest
+
+from repro.core.euler_tour import EulerTourForest
+from repro.core.skiplist import SkipListSeq
+
+
+class ForestOracle:
+    """Naive adjacency-set forest with BFS connectivity."""
+
+    def __init__(self):
+        self.adj = {}
+
+    def add_node(self, v):
+        self.adj[v] = set()
+
+    def remove_node(self, v):
+        assert not self.adj[v]
+        del self.adj[v]
+
+    def connected(self, u, v):
+        if u == v:
+            return True
+        seen = {u}
+        stack = [u]
+        while stack:
+            x = stack.pop()
+            for y in self.adj[x]:
+                if y == v:
+                    return True
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return False
+
+    def link(self, u, v):
+        if self.connected(u, v):
+            return False
+        self.adj[u].add(v)
+        self.adj[v].add(u)
+        return True
+
+    def cut(self, u, v):
+        if v not in self.adj[u]:
+            return False
+        self.adj[u].remove(v)
+        self.adj[v].remove(u)
+        return True
+
+    def component(self, v):
+        seen = {v}
+        stack = [v]
+        while stack:
+            x = stack.pop()
+            for y in self.adj[x]:
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return frozenset(seen)
+
+
+def check_consistent(f: EulerTourForest, o: ForestOracle, nodes):
+    # roots must induce exactly the oracle's components
+    by_root = {}
+    for v in nodes:
+        by_root.setdefault(f.root(v), set()).add(v)
+    comps = {o.component(v) for v in nodes}
+    assert {frozenset(s) for s in by_root.values()} == comps
+    # spot-check pairwise connectivity
+    vs = list(nodes)
+    rng = random.Random(len(nodes))
+    for _ in range(min(30, len(vs) * 2)):
+        a, b = rng.choice(vs), rng.choice(vs)
+        assert f.connected(a, b) == o.connected(a, b)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_link_cut(seed):
+    rng = random.Random(seed)
+    f = EulerTourForest(seed=seed)
+    o = ForestOracle()
+    n = 40
+    for v in range(n):
+        f.add_node(v)
+        o.add_node(v)
+    edges = set()
+    for step in range(600):
+        op = rng.random()
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u == v:
+            continue
+        if op < 0.55:
+            r1, r2 = f.link(u, v), o.link(u, v)
+            assert r1 == r2
+            if r1:
+                edges.add(frozenset((u, v)))
+        else:
+            if edges and rng.random() < 0.8:
+                u, v = tuple(rng.choice(sorted(tuple(sorted(e)) for e in edges)))
+            r1, r2 = f.cut(u, v), o.cut(u, v)
+            assert r1 == r2
+            edges.discard(frozenset((u, v)))
+        if step % 50 == 0:
+            check_consistent(f, o, range(n))
+    check_consistent(f, o, range(n))
+
+
+def test_tour_structure_valid():
+    """The stored sequence of each tree must be a valid Euler circuit."""
+    rng = random.Random(7)
+    f = EulerTourForest(seed=7)
+    n = 25
+    for v in range(n):
+        f.add_node(v)
+    for _ in range(200):
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u == v:
+            continue
+        if rng.random() < 0.6:
+            f.link(u, v)
+        else:
+            f.cut(u, v)
+    seen_roots = set()
+    for v in range(n):
+        r = f.root(v)
+        if r in seen_roots:
+            continue
+        seen_roots.add(r)
+        els = [e.payload for e in SkipListSeq.iter_seq(f._loop[v])]
+        # walk the circuit: consecutive elements must chain positions
+        def pos_of(p):
+            return (p[1], p[1]) if p[0] == "loop" else (p[1], p[2])
+        for a, b in zip(els, els[1:] + els[:1]):
+            pa, pb = pos_of(a), pos_of(b)
+            assert pa[1] == pb[0], (els, a, b)
+        # each loop appears once, each edge twice (once per direction)
+        loops = [p for p in els if p[0] == "loop"]
+        assert len(loops) == len(set(loops))
+        dir_edges = [p for p in els if p[0] == "edge"]
+        assert len(dir_edges) == len(set(dir_edges))
+        assert {(p[2], p[1]) for p in dir_edges} == {(p[1], p[2]) for p in dir_edges}
+
+
+def test_remove_node():
+    f = EulerTourForest()
+    for v in "abc":
+        f.add_node(v)
+    f.link("a", "b")
+    with pytest.raises(ValueError):
+        f.remove_node("a")
+    f.cut("a", "b")
+    f.remove_node("a")
+    assert "a" not in f
+    assert f.connected("b", "b")
+
+
+@pytest.mark.parametrize("backend", ["skiplist", "treap"])
+@pytest.mark.parametrize("seed", [0, 5])
+def test_backends_random_link_cut(backend, seed):
+    """Both sequence backends must satisfy the forest oracle."""
+    rng = random.Random(seed)
+    f = EulerTourForest(seed=seed, backend=backend)
+    o = ForestOracle()
+    n = 30
+    for v in range(n):
+        f.add_node(v)
+        o.add_node(v)
+    for step in range(400):
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u == v:
+            continue
+        if rng.random() < 0.55:
+            assert f.link(u, v) == o.link(u, v)
+        else:
+            assert f.cut(u, v) == o.cut(u, v)
+        if step % 80 == 0:
+            check_consistent(f, o, range(n))
+    check_consistent(f, o, range(n))

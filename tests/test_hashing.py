@@ -1,0 +1,91 @@
+"""Property tests for the grid-LSH family (Lemma 1 of the paper)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hashing import GridLSH
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    d=st.integers(1, 8),
+)
+def test_lemma1_part2_same_bucket_implies_linf_bound(seed, d):
+    """h(x) = h(y) ⟹ ||x - y||_inf <= 2 eps."""
+    rng = np.random.default_rng(seed)
+    eps = float(rng.uniform(0.1, 2.0))
+    lsh = GridLSH(d, eps, t=4, seed=seed)
+    x = rng.normal(size=d) * 3
+    y = rng.normal(size=d) * 3
+    kx, ky = lsh.keys(x), lsh.keys(y)
+    for i in range(4):
+        if kx[i] == ky[i]:
+            assert np.max(np.abs(x - y)) <= 2 * eps + 1e-9
+
+
+def test_lemma1_part1_collision_probability():
+    """Pr[h(x)=h(y)] >= 1 - ||x-y||_1 / (2 eps), estimated over many
+    independent eta draws."""
+    rng = np.random.default_rng(0)
+    d, eps = 4, 1.0
+    x = rng.normal(size=d)
+    for dist_scale in (0.05, 0.2, 0.5):
+        y = x + rng.uniform(-1, 1, size=d) * dist_scale
+        l1 = np.abs(x - y).sum()
+        if l1 >= 2 * eps:
+            continue
+        hits = 0
+        trials = 400
+        for s in range(trials):
+            lsh = GridLSH(d, eps, t=1, seed=s)
+            hits += lsh.keys(x)[0] == lsh.keys(y)[0]
+        p_hat = hits / trials
+        lower = 1 - l1 / (2 * eps)
+        # allow 3-sigma sampling slack
+        sigma = np.sqrt(max(lower * (1 - lower), 0.01) / trials)
+        assert p_hat >= lower - 3 * sigma, (p_hat, lower)
+
+
+def test_identical_points_always_collide():
+    lsh = GridLSH(6, 0.5, t=8, seed=1)
+    x = np.random.default_rng(2).normal(size=6)
+    assert lsh.keys(x) == lsh.keys(x.copy())
+
+
+def test_device_keys_consistent_with_exact_keys():
+    """Mixed-key (kernel) path must group points identically to the exact
+    path wherever the exact codes agree (f32 grid edges may differ)."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(500, 8))
+    lsh = GridLSH(8, 0.6, t=5, seed=3)
+    exact = lsh.codes_batch(X)          # (n, t, d) f64 codes
+    mixed = lsh.device_keys_batch(X)    # (n, t, 2) int32 keys
+    f32_codes = np.floor(
+        (X.astype(np.float32)[:, None, :]
+         + lsh.eta.astype(np.float32)[None, :, None])
+        * np.float32(lsh.inv_cell)
+    ).astype(np.int64)
+    for i in range(5):
+        _, ex_inv = np.unique(f32_codes[:, i, :], axis=0, return_inverse=True)
+        _, mx_inv = np.unique(
+            mixed[:, i, :].view(np.int64).reshape(-1), return_inverse=True
+        )
+        # identical partitions of the 500 points
+        pairs = {}
+        for a, b in zip(ex_inv, mx_inv):
+            assert pairs.setdefault(a, b) == b
+        rpairs = {}
+        for a, b in zip(mx_inv, ex_inv):
+            assert rpairs.setdefault(a, b) == b
+
+
+def test_batch_and_single_agree():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(50, 5))
+    lsh = GridLSH(5, 0.4, t=6, seed=4)
+    batch = lsh.keys_batch(X)
+    for j in range(50):
+        assert batch[j] == lsh.keys(X[j])

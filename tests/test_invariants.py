@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Invariants under arbitrary update sequences (paper §4.2 / Thm 2):
+  * support counts == exact Definition-4 core rule;
+  * G[C] is a spanning forest of H (per-bucket chain connectivity);
+  * non-core degree <= 1;
+  * core partition equals a from-scratch EMZ recompute;
+  * the structure is oblivious to update order (H order-invariance).
+"""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import DynamicDBSCAN, GridLSH, NOISE, emz_cluster
+from repro.core.skiplist import SkipListSeq
+
+
+def _apply_ops(dyn, ops):
+    alive = {}
+    serial = 0
+    for op, payload in ops:
+        if op == "add":
+            idx = dyn.add_point(np.array(payload))
+            alive[idx] = np.array(payload)
+            serial += 1
+        elif op == "del" and alive:
+            keys = sorted(alive.keys())
+            victim = keys[payload % len(keys)]
+            dyn.delete_point(victim)
+            del alive[victim]
+    return alive
+
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(
+            st.just("add"),
+            st.tuples(
+                st.integers(-6, 6).map(lambda v: v / 3.0),
+                st.integers(-6, 6).map(lambda v: v / 3.0),
+            ),
+        ),
+        st.tuples(st.just("del"), st.integers(0, 10**6)),
+    ),
+    min_size=1,
+    max_size=120,
+)
+
+
+@settings(max_examples=40, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy, seed=st.integers(0, 3))
+def test_invariants_hold_under_arbitrary_updates(ops, seed):
+    dyn = DynamicDBSCAN(2, k=3, t=4, eps=0.5, seed=seed)
+    _apply_ops(dyn, ops)
+    dyn.check_invariants()
+
+
+@settings(max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy, seed=st.integers(0, 3))
+def test_core_partition_matches_recompute(ops, seed):
+    lsh = GridLSH(2, 0.5, 4, seed=seed)
+    dyn = DynamicDBSCAN(2, k=3, t=4, eps=0.5, seed=seed, lsh=lsh)
+    alive = _apply_ops(dyn, ops)
+    if not alive:
+        return
+    ids = sorted(alive.keys())
+    X = np.stack([alive[i] for i in ids])
+    static, score = emz_cluster(X, 3, 0.5, 4, lsh=lsh, return_core=True)
+    dyn_core = np.array([dyn.is_core(i) for i in ids])
+    assert np.array_equal(dyn_core, score)
+    labels = dyn.labels(ids)
+    la = np.array([labels[i] for i in ids])
+    assert np.array_equal(la == NOISE, static == NOISE)
+    # bijective cluster mapping on core points
+    fw, bw = {}, {}
+    for a, b in zip(la[dyn_core], static[score]):
+        assert fw.setdefault(a, b) == b
+        assert bw.setdefault(b, a) == a
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["link", "cut"]), st.integers(0, 11), st.integers(0, 11)),
+        max_size=80,
+    ),
+    seed=st.integers(0, 5),
+)
+def test_euler_tour_matches_union_find_on_links(ops, seed):
+    """Forest connectivity == incremental oracle under arbitrary link/cut."""
+    from repro.core import EulerTourForest
+
+    f = EulerTourForest(seed=seed)
+    adj = {v: set() for v in range(12)}
+    for v in range(12):
+        f.add_node(v)
+
+    def connected(u, v):
+        seen, stack = {u}, [u]
+        while stack:
+            x = stack.pop()
+            if x == v:
+                return True
+            for y in adj[x]:
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return False
+
+    for op, u, v in ops:
+        if u == v:
+            continue
+        if op == "link":
+            expect = not connected(u, v)
+            assert f.link(u, v) == expect
+            if expect:
+                adj[u].add(v)
+                adj[v].add(u)
+        else:
+            expect = v in adj[u]
+            assert f.cut(u, v) == expect
+            adj[u].discard(v)
+            adj[v].discard(u)
+        for a in range(0, 12, 3):
+            for b in range(1, 12, 4):
+                assert f.connected(a, b) == connected(a, b)
+
+
+def test_order_invariance_of_core_partition():
+    """H is invariant to arrival order ⇒ core partition must be too."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(120, 2)) * 0.6
+    lsh = GridLSH(2, 0.4, 5, seed=9)
+    results = []
+    for perm_seed in (1, 2):
+        perm = np.random.default_rng(perm_seed).permutation(len(X))
+        dyn = DynamicDBSCAN(2, k=4, t=5, eps=0.4, seed=9, lsh=lsh)
+        id_of = {}
+        for j in perm:
+            id_of[j] = dyn.add_point(X[j])
+        labels = dyn.labels()
+        core = {j for j in range(len(X)) if dyn.is_core(id_of[j])}
+        part = {}
+        for j in range(len(X)):
+            part.setdefault(labels[id_of[j]], set()).add(j)
+        core_part = {frozenset(s & core) for s in part.values() if s & core}
+        results.append((core, core_part))
+    assert results[0] == results[1]

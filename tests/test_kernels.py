@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.flash_attention as fa
+import repro.kernels.lsh_hash as lh
+import repro.kernels.pairwise_dist as pd
+from repro.kernels import ref
+
+
+# --------------------------------------------------------------------- #
+# lsh_hash
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,d,t", [(64, 4, 3), (200, 16, 10), (33, 7, 5), (256, 20, 8)])
+def test_lsh_hash_matches_ref(n, d, t):
+    rng = np.random.default_rng(n + d + t)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    eta = rng.uniform(0, 1.5, size=(t,)).astype(np.float32)
+    mixers = rng.integers(1, 2**31 - 1, size=(2, t, d)).astype(np.int32) | 1
+    out_k = lh.lsh_hash(x, eta, mixers, inv_cell=1 / 1.5, block_n=64, interpret=True)
+    out_r = ref.lsh_hash(jnp.asarray(x), jnp.asarray(eta), jnp.asarray(mixers), 1 / 1.5)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_lsh_hash_same_bucket_iff_same_code():
+    """Points < cell apart that share a cell must share keys; far points
+    must (w.h.p.) not."""
+    rng = np.random.default_rng(0)
+    d, t = 8, 6
+    eps = 0.5
+    base = rng.normal(size=(1, d)).astype(np.float32)
+    near = base + 1e-5
+    far = base + 10.0
+    x = np.concatenate([base, near, far]).astype(np.float32)
+    eta = rng.uniform(0, 2 * eps, size=(t,)).astype(np.float32)
+    mixers = rng.integers(1, 2**31 - 1, size=(2, t, d)).astype(np.int32) | 1
+    keys = np.asarray(lh.lsh_hash(x, eta, mixers, inv_cell=1 / (2 * eps), interpret=True))
+    assert (keys[0] == keys[1]).all()
+    assert not (keys[0] == keys[2]).all()
+
+
+# --------------------------------------------------------------------- #
+# eps_neighbor_counts
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,d", [(50, 3), (130, 8), (257, 16)])
+def test_pairwise_counts_match_ref(n, d):
+    rng = np.random.default_rng(n * d)
+    x = (rng.normal(size=(n, d)) * 0.7).astype(np.float32)
+    eps = 0.8
+    out_k = pd.eps_neighbor_counts(x, eps=eps, block_m=64, block_n=64, interpret=True)
+    out_r = ref.eps_neighbor_counts(jnp.asarray(x), eps)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_pairwise_counts_match_exact_numpy():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(80, 5)).astype(np.float32)
+    eps = 1.0
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    exact = (d2 <= eps * eps + 1e-6).sum(-1)
+    out = pd.eps_neighbor_counts(x, eps=eps, block_m=32, block_n=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), exact)
+
+
+# --------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,dh,causal,window",
+    [
+        (1, 2, 2, 64, 64, 32, True, None),
+        (2, 4, 2, 128, 128, 64, True, None),
+        (1, 4, 1, 96, 96, 32, True, None),       # MQA, non-multiple seq
+        (1, 2, 2, 64, 64, 32, True, 16),         # sliding window
+        (2, 2, 2, 1, 128, 32, True, None),       # decode: 1 query token
+        (1, 2, 2, 64, 64, 32, False, None),      # bidirectional (encoder)
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, dh, causal, window):
+    rng = np.random.default_rng(hq * sq + skv + dh)
+    q = rng.normal(size=(b, hq, sq, dh)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, skv, dh)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, skv, dh)).astype(np.float32)
+    q_off = skv - sq if causal else 0
+    out_k = fa.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_off,
+        block_q=32, block_k=32, interpret=True,
+    )
+    out_r = ref.attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, window=window, q_offset=q_off,
+    )
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), dtype=dtype)
+    out_k = fa.flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    out_r = ref.attention(q, k, v)
+    assert out_k.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, dtype=np.float32),
+        np.asarray(out_r, dtype=np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_long_decode_row():
+    """Decode shape: one query against a long KV with GQA grouping."""
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(2, 8, 1, 64)).astype(np.float32)
+    k = rng.normal(size=(2, 2, 512, 64)).astype(np.float32)
+    v = rng.normal(size=(2, 2, 512, 64)).astype(np.float32)
+    out_k = fa.flash_attention(
+        q, k, v, q_offset=511, block_q=1, block_k=128, interpret=True
+    )
+    out_r = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), q_offset=511)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=2e-5)

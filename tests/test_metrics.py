@@ -1,0 +1,60 @@
+"""ARI/NMI against hand-computed and well-known reference values."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import adjusted_rand_index, normalized_mutual_info
+
+
+def test_perfect_agreement():
+    a = [0, 0, 1, 1, 2, 2]
+    assert adjusted_rand_index(a, a) == pytest.approx(1.0)
+    assert normalized_mutual_info(a, a) == pytest.approx(1.0)
+
+
+def test_label_permutation_invariance():
+    a = [0, 0, 1, 1, 2, 2]
+    b = [5, 5, 9, 9, 7, 7]
+    assert adjusted_rand_index(a, b) == pytest.approx(1.0)
+    assert normalized_mutual_info(a, b) == pytest.approx(1.0)
+
+
+def test_known_ari_value():
+    # classic example: sklearn.metrics.adjusted_rand_score reference
+    a = [0, 0, 1, 1]
+    b = [0, 0, 1, 2]
+    assert adjusted_rand_index(a, b) == pytest.approx(0.5714285714, abs=1e-9)
+
+
+def test_known_nmi_value():
+    a = [0, 0, 1, 1]
+    b = [0, 0, 1, 2]
+    # by hand: MI = ln2; H(U) = ln2; H(V) = 1.5 ln2 - 0.5 ln... = 1.0397;
+    # arithmetic NMI = ln2 / ((ln2 + 1.0397)/2) = 0.8
+    assert normalized_mutual_info(a, b) == pytest.approx(0.8, abs=1e-6)
+    # geometric variant
+    assert normalized_mutual_info(a, b, average="geometric") == pytest.approx(
+        0.6931 / np.sqrt(0.6931 * 1.0397), abs=1e-3
+    )
+
+
+def test_single_cluster_vs_many():
+    a = [0] * 10
+    b = list(range(10))
+    assert adjusted_rand_index(a, b) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_random_labels_near_zero_ari():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 5, 2000)
+    b = rng.integers(0, 5, 2000)
+    assert abs(adjusted_rand_index(a, b)) < 0.02
+    assert normalized_mutual_info(a, b) < 0.02
+
+
+def test_ari_symmetry():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 4, 200)
+    b = rng.integers(0, 3, 200)
+    assert adjusted_rand_index(a, b) == pytest.approx(adjusted_rand_index(b, a))
+    assert normalized_mutual_info(a, b) == pytest.approx(normalized_mutual_info(b, a))

@@ -1,0 +1,112 @@
+"""Data pipeline (+DBSCAN curation) and serving engine behaviour tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import CurationFilter, Pipeline, SyntheticTokenStream
+from repro.models.registry import build_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def test_synthetic_stream_shapes():
+    src = SyntheticTokenStream(vocab_size=100, seq_len=16, batch=8)
+    batch = next(iter(src))
+    assert batch["tokens"].shape == (8, 16)
+    assert batch["labels"].shape == (8, 16)
+    assert batch["embeddings"].shape == (8, 16)
+    assert (batch["tokens"] < 100).all()
+
+
+def test_curation_balance_policy_downsamples_dominant_cluster():
+    rng = np.random.default_rng(0)
+    cf = CurationFilter(d=4, k=6, t=6, eps=0.5, policy="balance",
+                        max_per_cluster_frac=0.3, window=10_000)
+    # one dominant tight cluster + scattered noise
+    dom = rng.normal(size=(300, 4)) * 0.05
+    scat = rng.uniform(-6, 6, size=(60, 4))
+    keep_dom = cf.filter(dom)
+    keep_scat = cf.filter(scat)
+    assert keep_dom.mean() < 0.9          # dominant cluster throttled
+    assert keep_scat.mean() > 0.8          # noise/low-density kept
+
+
+def test_curation_sliding_window_deletes():
+    cf = CurationFilter(d=3, k=4, t=4, eps=0.5, window=50)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        cf.filter(rng.normal(size=(20, 3)))
+    assert len(cf.dbscan.points) <= 50
+    cf.dbscan.check_invariants()
+
+
+def test_pipeline_prefetch_and_fixed_shape():
+    src = SyntheticTokenStream(vocab_size=64, seq_len=8, batch=6, seed=2)
+    cf = CurationFilter(d=16, k=4, t=4, eps=0.6, policy="balance")
+    pipe = Pipeline(iter(src), curation=cf, prefetch=2)
+    for _ in range(4):
+        b = next(pipe)
+        assert b["tokens"].shape == (6, 8)
+    pipe.close()
+    assert cf.n_seen >= 24
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "mamba2-780m"])
+def test_serving_engine_drains_requests(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, batch=4, kv_len=32)
+    rng = np.random.default_rng(0)
+    for rid in range(6):
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(1, cfg.vocab_size, size=rng.integers(2, 5)),
+            max_new_tokens=4,
+        ))
+    done = eng.run_until_drained(max_steps=200)
+    assert sorted(done) == list(range(6))
+    for r in done.values():
+        assert len(r.out_tokens) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.out_tokens)
+
+
+def test_serving_engine_isolation_between_slots():
+    """A request's output must not depend on which other requests share the
+    batch (active-mask correctness)."""
+    cfg = get_config("granite-20b").smoke()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1))
+    prompt = np.array([5, 9, 3], dtype=np.int64)
+
+    def run(extra):
+        eng = ServingEngine(model, params, batch=4, kv_len=32)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        for rid, p in enumerate(extra, start=1):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+        return eng.run_until_drained(max_steps=200)[0].out_tokens
+
+    alone = run([])
+    crowded = run([np.array([7, 7]), np.array([1, 2, 3, 4])])
+    assert alone == crowded
+
+
+def test_request_clustering_groups_similar():
+    cfg = get_config("mamba2-780m").smoke()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(2))
+    eng = ServingEngine(model, params, batch=2, kv_len=16,
+                        cluster_requests=True, embed_dim=4)
+    rng = np.random.default_rng(3)
+    center = rng.normal(size=4)
+    for rid in range(8):
+        emb = center + 0.01 * rng.normal(size=4) if rid % 2 == 0 else \
+            rng.uniform(-5, 5, size=4)
+        eng.submit(Request(rid=rid, prompt=np.array([1, 2]),
+                           max_new_tokens=2, embedding=emb))
+    done = eng.run_until_drained(max_steps=400)
+    assert len(done) == 8

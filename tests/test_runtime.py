@@ -1,0 +1,162 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic planning,
+checkpoint save/restore (+async, atomic, reshard), gradient compression."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import (
+    int8_compress_decompress,
+    make_compressed_grad_transform,
+    topk_compress_decompress,
+)
+from repro.runtime import ElasticPlan, HeartbeatRegistry, StragglerDetector, plan_remesh
+
+
+# --------------------------------------------------------------------- #
+# heartbeat
+# --------------------------------------------------------------------- #
+def test_heartbeat_failure_detection():
+    t = [0.0]
+    hb = HeartbeatRegistry(4, timeout_s=10.0, clock=lambda: t[0])
+    for h in range(4):
+        hb.beat(h, step=5)
+    t[0] = 8.0
+    hb.beat(0, step=6)
+    hb.beat(1, step=6)
+    assert hb.failed() == []
+    t[0] = 12.0
+    assert hb.failed() == [2, 3]
+    assert hb.alive() == [0, 1]
+    hb.evict(2)
+    hb.evict(3)
+    assert hb.quorum_step() == 6
+    hb.rejoin(2)
+    assert 2 in hb.alive()
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(4, threshold=1.5, patience=2)
+    for step in range(6):
+        for h in range(4):
+            sd.record(h, 1.0 if h != 3 else 3.0)
+        sd.update_breaches()
+    assert sd.stragglers() == [3]
+    # recovery clears the flag once the EWMA decays under threshold
+    for step in range(15):
+        for h in range(4):
+            sd.record(h, 1.0)
+        sd.update_breaches()
+    assert sd.stragglers() == []
+
+
+# --------------------------------------------------------------------- #
+# elastic planning
+# --------------------------------------------------------------------- #
+def test_plan_remesh_drops_to_pow2_dp():
+    # 7 surviving hosts × 4 chips, model=4 → 28 chips → dp=4 (pow2 ≤ 7)
+    plan = plan_remesh(list(range(7)), chips_per_host=4, model_parallel=4,
+                       global_batch=256, microbatch=16)
+    assert plan.data_parallel == 4
+    assert plan.grad_accum == 4  # 4 × 16 × 4 == 256
+    assert len(plan.hosts) == 4
+    assert set(plan.dropped_hosts) == {4, 5, 6}
+
+
+def test_plan_remesh_infeasible():
+    assert plan_remesh([0], chips_per_host=4, model_parallel=16,
+                       global_batch=64, microbatch=8) is None
+
+
+def test_plan_remesh_preserves_global_batch():
+    for n_hosts in (2, 3, 5, 8, 13):
+        plan = plan_remesh(list(range(n_hosts)), 8, 8, 512, 8)
+        if plan is None:
+            continue
+        assert plan.grad_accum * plan.data_parallel * 8 >= 512
+
+
+# --------------------------------------------------------------------- #
+# checkpointing
+# --------------------------------------------------------------------- #
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layers": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)},
+        "head": jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    tree = _tree()
+    mgr.save(100, tree, extra={"loss": 1.5})
+    assert mgr.latest_step() == 100
+    restored = mgr.restore(jax.tree.map(lambda x: jnp.zeros_like(x), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mgr.manifest()["extra"]["loss"] == 1.5
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=2, async_write=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    mgr.wait()
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2
+    assert mgr.latest_step() == 4
+    r = mgr.restore(_tree(), step=4)
+    np.testing.assert_array_equal(
+        np.asarray(r["head"]), np.asarray(_tree(4)["head"])
+    )
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A stale temp dir must not corrupt LATEST."""
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save(10, _tree())
+    (tmp_path / ".tmp_step_00000020_999").mkdir()
+    assert mgr.latest_step() == 10
+    mgr.restore(_tree(), step=10)
+
+
+# --------------------------------------------------------------------- #
+# gradient compression
+# --------------------------------------------------------------------- #
+def test_int8_compression_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    deq, res = int8_compress_decompress(g)
+    assert float(jnp.abs(res).max()) <= float(jnp.abs(g).max()) / 127 + 1e-6
+    np.testing.assert_allclose(np.asarray(deq + res), np.asarray(g), atol=1e-6)
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05], jnp.float32)
+    kept, res = topk_compress_decompress(g, frac=0.4)
+    assert float(kept[1]) == -5.0 and float(kept[3]) == 3.0
+    assert float(kept[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(kept + res), np.asarray(g), atol=1e-6)
+
+
+def test_error_feedback_converges():
+    """With error feedback, the *sum* of compressed grads tracks the sum of
+    true grads (bias-free compression)."""
+    init, transform = make_compressed_grad_transform("int8")
+    params = {"w": jnp.zeros((64,))}
+    res = init(params)
+    rng = np.random.default_rng(1)
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+        comp, res = transform(g, res)
+        total_true += np.asarray(g["w"])
+        total_comp += np.asarray(comp["w"])
+    # residual bounds the gap
+    gap = np.abs(total_true - total_comp).max()
+    assert gap <= float(jnp.abs(res["w"]).max()) + 1e-5
