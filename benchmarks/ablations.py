@@ -15,7 +15,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import DynamicDBSCAN, GridLSH, adjusted_rand_index
+from repro.api import ClusterConfig, build_index
+from repro.core import adjusted_rand_index
 from repro.core.euler_tour import EulerTourForest
 from repro.data import blobs
 
@@ -27,8 +28,9 @@ def kt_sensitivity(n=6000, seed=0):
     rows = []
     for k in (5, 10, 20):
         for t in (5, 10, 20):
-            dyn = DynamicDBSCAN(10, k, t, 0.75, seed=seed)
-            ids = [dyn.add_point(p) for p in X]
+            dyn = build_index(ClusterConfig(d=10, k=k, t=t, eps=0.75,
+                                            seed=seed, backend="dynamic"))
+            ids = dyn.insert_batch(X)
             lab = dyn.labels(ids)
             ari = adjusted_rand_index(y, np.array([lab[i] for i in ids]))
             rows.append({"k": k, "t": t, "ari": ari})
@@ -42,9 +44,10 @@ def orphan_ablation(n=5000, seed=1):
     X, y = blobs(n=n, d=8, n_clusters=8, cluster_std=0.25, seed=seed)
     rows = []
     for attach in (True, False):
-        lsh = GridLSH(8, 0.6, 8, seed=seed)
-        dyn = DynamicDBSCAN(8, 10, 8, 0.6, lsh=lsh, attach_orphans=attach)
-        ids = [dyn.add_point(p) for p in X]
+        dyn = build_index(ClusterConfig(d=8, k=10, t=8, eps=0.6, seed=seed,
+                                        attach_orphans=attach,
+                                        backend="dynamic"))
+        ids = dyn.insert_batch(X)
         lab = dyn.labels(ids)
         arr = np.array([lab[i] for i in ids])
         rows.append({
@@ -81,16 +84,17 @@ def backend_timing(n=4000, seed=2):
 
 def repair_frequency(n=6000, seed=3):
     X, _ = blobs(n=n, d=8, n_clusters=8, seed=seed)
-    dyn = DynamicDBSCAN(8, 10, 8, 0.6, seed=seed)
-    ids = [dyn.add_point(p) for p in X]
+    dyn = build_index(ClusterConfig(d=8, k=10, t=8, eps=0.6, seed=seed,
+                                    backend="dynamic"))
+    ids = dyn.insert_batch(X)
     n_del = n // 2
-    for i in ids[:n_del]:
-        dyn.delete_point(i)
-    frac = dyn.n_repair_scans / n_del
-    print(f"  repair scans: {dyn.n_repair_scans} over {n_del} deletions "
-          f"({frac:.4f}/deletion), {dyn.n_repair_links} replacement links")
-    return {"deletions": n_del, "repair_scans": dyn.n_repair_scans,
-            "repair_links": dyn.n_repair_links, "frac": frac}
+    dyn.delete_batch(ids[:n_del])
+    stats = dyn.stats()
+    frac = stats["n_repair_scans"] / n_del
+    print(f"  repair scans: {stats['n_repair_scans']} over {n_del} deletions "
+          f"({frac:.4f}/deletion), {stats['n_repair_links']} replacement links")
+    return {"deletions": n_del, "repair_scans": stats["n_repair_scans"],
+            "repair_links": stats["n_repair_links"], "frac": frac}
 
 
 def run():

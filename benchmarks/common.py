@@ -1,18 +1,28 @@
 """Shared benchmark utilities: streaming evaluation protocol of the paper
-(§5): stream batches, recluster/update, evaluate ARI/NMI on all points."""
+(§5): stream batches, recluster/update, evaluate ARI/NMI on all points.
+
+Every clusterer is built through ``repro.api.build_index``, so one loop
+drives every engine and an algo is just a backend key (legacy aliases from
+the paper's table headings are accepted)."""
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core import (
-    DynamicDBSCAN, EMZFixedCore, EMZRecompute, GridLSH, SklearnStyleDBSCAN,
-    adjusted_rand_index, normalized_mutual_info,
-)
-from repro.core.batched import BatchedDynamicDBSCAN
+from repro.api import ClusterConfig, build_index
+from repro.core import adjusted_rand_index, normalized_mutual_info
+
+# paper table headings -> registry keys
+ALGO_TO_BACKEND = {
+    "dydbscan": "dynamic",
+    "dydbscan_batched": "batched",
+    "emz": "emz-static",
+    "emz_fixed": "emz-fixed",
+    "sklearn": "naive",
+}
 
 
 def stream_eval(
@@ -24,58 +34,26 @@ def stream_eval(
     eps: float = 0.75,
     batch: int = 1000,
     seed: int = 0,
-    algos=("dydbscan", "emz", "sklearn"),
+    algos=("dynamic", "emz-static", "naive"),
     eval_every: Optional[int] = None,
 ) -> Dict[str, Dict]:
     """Run the paper's streaming protocol; returns per-algo time/ARI/NMI."""
-    d = X.shape[1]
-    lsh = GridLSH(d, eps, t, seed=seed)
+    cfg = ClusterConfig(d=X.shape[1], k=k, t=t, eps=eps, seed=seed)
     out: Dict[str, Dict] = {}
 
     for algo in algos:
+        backend = ALGO_TO_BACKEND.get(algo, algo)
+        index = build_index(cfg.replace(backend=backend))
         t_total = 0.0
-        labels = None
-        if algo == "dydbscan":
-            inst = DynamicDBSCAN(d, k, t, eps, lsh=lsh)
-            ids: List[int] = []
-            for s in range(0, len(X), batch):
-                xb = X[s : s + batch]
-                t0 = time.perf_counter()
-                for p in xb:
-                    ids.append(inst.add_point(p))
-                lab = inst.labels(ids)
-                t_total += time.perf_counter() - t0
-            labels = np.array([lab[i] for i in ids])
-        elif algo == "dydbscan_batched":
-            inst = BatchedDynamicDBSCAN(d, k, t, eps, seed=seed)
-            ids = []
-            for s in range(0, len(X), batch):
-                xb = X[s : s + batch]
-                t0 = time.perf_counter()
-                ids.extend(inst.add_batch(xb))
-                lab = inst.labels(ids)
-                t_total += time.perf_counter() - t0
-            labels = np.array([lab[i] for i in ids])
-        elif algo == "emz":
-            inst = EMZRecompute(d, k, t, eps, lsh=lsh)
-            for s in range(0, len(X), batch):
-                t0 = time.perf_counter()
-                labels = inst.add_batch(X[s : s + batch])
-                t_total += time.perf_counter() - t0
-        elif algo == "emz_fixed":
-            inst = EMZFixedCore(d, k, t, eps, lsh=lsh)
-            for s in range(0, len(X), batch):
-                t0 = time.perf_counter()
-                labels = inst.add_batch(X[s : s + batch])
-                t_total += time.perf_counter() - t0
-        elif algo == "sklearn":
-            inst = SklearnStyleDBSCAN(k, eps)
-            for s in range(0, len(X), batch):
-                t0 = time.perf_counter()
-                labels = inst.add_batch(X[s : s + batch])
-                t_total += time.perf_counter() - t0
-        else:
-            raise ValueError(algo)
+        ids = []
+        lab: Dict[int, int] = {}
+        for s in range(0, len(X), batch):
+            xb = X[s : s + batch]
+            t0 = time.perf_counter()
+            ids.extend(index.insert_batch(xb))
+            lab = index.labels(ids)
+            t_total += time.perf_counter() - t0
+        labels = np.array([lab[i] for i in ids])
         out[algo] = {
             "time_s": t_total,
             "ari": adjusted_rand_index(y, labels),

@@ -1,6 +1,9 @@
 """Paper Figure 2 (blobs): (a) running time vs stream length; (b) ARI with
 random arrival; (c) ARI with cluster-by-cluster arrival, where the
-EMZFixedCore ablation is expected to collapse and DynamicDBSCAN is not."""
+EMZFixedCore ablation is expected to collapse and DynamicDBSCAN is not.
+
+All clusterers are built through repro.api; ``--backend`` swaps the
+dynamic engine under test."""
 
 from __future__ import annotations
 
@@ -11,42 +14,37 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import (DynamicDBSCAN, EMZFixedCore, EMZRecompute, GridLSH,
-                        adjusted_rand_index)
+from repro.api import ClusterConfig, build_index
+from repro.core import adjusted_rand_index
 from repro.data import blobs
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
 
 
-def run_panel(order: str, n: int = 20000, batch: int = 1000, seed: int = 0):
+def run_panel(order: str, n: int = 20000, batch: int = 1000, seed: int = 0,
+              backend: str = "dynamic"):
     X, y = blobs(n=n, d=10, n_clusters=10, cluster_std=0.25, seed=seed)
     if order == "cluster":
         idx = np.argsort(y, kind="stable")
         X, y = X[idx], y[idx]
-    d = X.shape[1]
-    lsh = GridLSH(d, EPS, T, seed=seed)
+    cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed)
     algos = {
-        "dydbscan": DynamicDBSCAN(d, K, T, EPS, lsh=lsh),
-        "emz": EMZRecompute(d, K, T, EPS, lsh=lsh),
-        "emz_fixed": EMZFixedCore(d, K, T, EPS, lsh=lsh),
+        b: build_index(cfg.replace(backend=b))
+        for b in dict.fromkeys((backend, "emz-static", "emz-fixed"))
     }
     curve = {a: {"n": [], "ari": [], "cum_time": []} for a in algos}
-    ids = []
+    ids = {a: [] for a in algos}
     cum = {a: 0.0 for a in algos}
     for s in range(0, n, batch):
         xb = X[s : s + batch]
         seen = s + len(xb)
         for a, inst in algos.items():
             t0 = time.perf_counter()
-            if a == "dydbscan":
-                for p in xb:
-                    ids.append(inst.add_point(p))
-                lab = inst.labels(ids)
-                labels = np.array([lab[i] for i in ids])
-            else:
-                labels = inst.add_batch(xb)
+            ids[a].extend(inst.insert_batch(xb))
+            lab = inst.labels(ids[a])
             cum[a] += time.perf_counter() - t0
+            labels = np.array([lab[i] for i in ids[a]])
             curve[a]["n"].append(seen)
             curve[a]["ari"].append(adjusted_rand_index(y[:seen], labels))
             curve[a]["cum_time"].append(cum[a])
@@ -57,17 +55,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--panel", default="all", choices=["a", "b", "c", "all"])
     ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--backend", default="dynamic")
     args = ap.parse_args(argv)
     out = {}
     if args.panel in ("a", "b", "all"):
         print("== random arrival (panels a+b)")
-        out["random"] = run_panel("random", n=args.n)
+        out["random"] = run_panel("random", n=args.n, backend=args.backend)
         for a, c in out["random"].items():
             print(f"  {a:10} final ARI={c['ari'][-1]:.3f} "
                   f"total={c['cum_time'][-1]:.2f}s")
     if args.panel in ("c", "all"):
         print("== cluster-by-cluster arrival (panel c)")
-        out["cluster"] = run_panel("cluster", n=args.n)
+        out["cluster"] = run_panel("cluster", n=args.n, backend=args.backend)
         for a, c in out["cluster"].items():
             print(f"  {a:10} final ARI={c['ari'][-1]:.3f} "
                   f"total={c['cum_time'][-1]:.2f}s")

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DynamicDBSCAN, GridLSH
-from repro.core.batched import BatchedDynamicDBSCAN
+from repro.api import ClusterConfig, build_index
 from repro.data import blobs
 from repro.kernels import ops
 
@@ -62,15 +61,16 @@ def run():
 
     # batched vs sequential dynamic updates (paper technique throughput)
     X, _ = blobs(n=20000, d=20, n_clusters=10, seed=1)
+    cfg = ClusterConfig(d=20, k=10, t=10, eps=0.75, seed=0)
     t0 = time.perf_counter()
-    seq = DynamicDBSCAN(20, 10, 10, 0.75, seed=0)
+    seq = build_index(cfg.replace(backend="dynamic"))
     for p in X:
-        seq.add_point(p)
+        seq.insert(p)
     dt_seq = time.perf_counter() - t0
     t0 = time.perf_counter()
-    bat = BatchedDynamicDBSCAN(20, 10, 10, 0.75, seed=0)
+    bat = build_index(cfg.replace(backend="batched"))
     for s in range(0, len(X), 1000):
-        bat.add_batch(X[s : s + 1000])
+        bat.insert_batch(X[s : s + 1000])
     dt_bat = time.perf_counter() - t0
     rows.append({"bench": "dyn insert 20k seq", "us_per_call": dt_seq / len(X) * 1e6,
                  "derived": f"{len(X)/dt_seq:.0f} pts/s"})

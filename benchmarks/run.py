@@ -13,11 +13,16 @@ import argparse
 
 
 def main(argv=None) -> None:
+    from repro.api import available_backends
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["table2", "figure2", "scaling", "kernels",
                              "ablations", "paper_roofline", "roofline"])
+    ap.add_argument("--backend", default="dynamic",
+                    choices=available_backends(),
+                    help="repro.api backend for the dynamic engine under test")
     args = ap.parse_args(argv)
 
     csv_rows = []
@@ -28,7 +33,9 @@ def main(argv=None) -> None:
     if args.only in (None, "table2"):
         print("\n===== Table 2: streaming time / ARI / NMI =====")
         from .table2 import run as t2
-        rows = t2(scale=1.0 if args.full else 0.05)
+        rows = t2(scale=1.0 if args.full else 0.05,
+                  algos=tuple(dict.fromkeys(
+                      (args.backend, "emz-static", "emz-fixed", "naive"))))
         for r in rows:
             emit(f"table2/{r['dataset']}/{r['algo']}",
                  r["time_s"] * 1e6,
@@ -37,7 +44,8 @@ def main(argv=None) -> None:
     if args.only in (None, "figure2"):
         print("\n===== Figure 2: blobs arrival-order study =====")
         from .figure2 import main as f2
-        out = f2(["--n", "20000" if args.full else "8000"])
+        out = f2(["--n", "20000" if args.full else "8000",
+                  "--backend", args.backend])
         for order, curves in out.items():
             for algo, c in curves.items():
                 emit(f"figure2/{order}/{algo}", c["cum_time"][-1] * 1e6,
@@ -46,7 +54,7 @@ def main(argv=None) -> None:
     if args.only in (None, "scaling"):
         print("\n===== Update-complexity scaling (Thm 1 / Remark 1) =====")
         from .scaling import run as sc
-        rows = sc(max_n=64000 if args.full else 16000)
+        rows = sc(max_n=64000 if args.full else 16000, backend=args.backend)
         for r in rows:
             emit(f"scaling/n{r['n']}", r["dyn_per_update_us"],
                  f"emz_recompute={r['emz_recompute_s']:.3f}s")

@@ -12,30 +12,31 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import DynamicDBSCAN, GridLSH, emz_cluster
+from repro.api import ClusterConfig, build_index
+from repro.core import GridLSH, emz_cluster
 from repro.data import blobs
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
 
 
-def run(max_n: int = 64000, probe: int = 200, seed: int = 0):
+def run(max_n: int = 64000, probe: int = 200, seed: int = 0,
+        backend: str = "dynamic"):
     X, _ = blobs(n=max_n + probe, d=10, n_clusters=10, seed=seed)
     d = X.shape[1]
     lsh = GridLSH(d, EPS, T, seed=seed)
-    dyn = DynamicDBSCAN(d, K, T, EPS, lsh=lsh)
+    dyn = build_index(ClusterConfig(d=d, k=K, t=T, eps=EPS, seed=seed,
+                                    backend=backend))
     rows = []
     n = 0
     checkpoints = [1000 * 2 ** i for i in range(20) if 1000 * 2 ** i <= max_n]
     for target in checkpoints:
-        while n < target:
-            dyn.add_point(X[n])
-            n += 1
+        dyn.insert_batch(X[n:target])
+        n = target
         # per-update cost: insert+delete `probe` extra points
         t0 = time.perf_counter()
-        pids = [dyn.add_point(X[max_n + j]) for j in range(probe)]
-        for i in pids:
-            dyn.delete_point(i)
+        pids = [dyn.insert(X[max_n + j]) for j in range(probe)]
+        dyn.delete_batch(pids)
         dt_dyn = (time.perf_counter() - t0) / (2 * probe)
         # one static EMZ recompute at this n (what one update costs if you
         # reprocess, as Remark 1 argues)
@@ -63,8 +64,9 @@ def run(max_n: int = 64000, probe: int = 200, seed: int = 0):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--max-n", type=int, default=32000)
+    ap.add_argument("--backend", default="dynamic")
     args = ap.parse_args(argv)
-    run(max_n=args.max_n)
+    run(max_n=args.max_n, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ K, T, EPS = 10, 10, 0.75
 
 def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0):
     datasets = datasets or ["letter", "mnist", "fashion-mnist", "blobs"]
-    algos = algos or ("dydbscan", "emz", "emz_fixed", "sklearn")
+    algos = algos or ("dynamic", "emz-static", "emz-fixed", "naive")
     rows = []
     for name in datasets:
         if name == "blobs":
@@ -37,7 +37,7 @@ def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0):
             X, y = dataset_standin(name, seed=seed, scale=scale)
         # exact DBSCAN is O(n^2): cap its dataset size
         use = tuple(a for a in algos
-                    if not (a == "sklearn" and len(X) > 25000))
+                    if not (a in ("naive", "sklearn") and len(X) > 25000))
         res = stream_eval(name, X, y, k=K, t=T, eps=EPS, seed=seed, algos=use)
         for algo, m in res.items():
             rows.append({"dataset": name, "n": len(X), "algo": algo, **m})
@@ -54,8 +54,12 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--datasets", nargs="*", default=None)
+    ap.add_argument("--backend", default="dynamic",
+                    help="repro.api backend for the dynamic column")
     args = ap.parse_args(argv)
-    run(scale=1.0 if args.full else args.scale, datasets=args.datasets)
+    run(scale=1.0 if args.full else args.scale, datasets=args.datasets,
+        algos=tuple(dict.fromkeys(
+            (args.backend, "emz-static", "emz-fixed", "naive"))))
 
 
 if __name__ == "__main__":

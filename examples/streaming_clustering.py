@@ -1,44 +1,55 @@
 """The paper's core experiment, end to end: stream a dynamic dataset into
-DynamicDBSCAN (insertions + sliding-window deletions) and track clustering
-quality against EMZ-recompute — Figure 2's workload at laptop scale.
+a ClusterIndex (insertions + sliding-window deletions) and track clustering
+quality against the EMZ-recompute baseline — Figure 2's workload at laptop
+scale.  Both clusterers are built through repro.api, so swapping engines is
+a CLI flag:
 
     PYTHONPATH=src python examples/streaming_clustering.py
+    PYTHONPATH=src python examples/streaming_clustering.py --backend batched
 """
+import argparse
 import time
 
 import numpy as np
 
-from repro.core import (DynamicDBSCAN, EMZRecompute, GridLSH,
-                        adjusted_rand_index)
+from repro.api import ClusterConfig, available_backends, build_index
+from repro.core import adjusted_rand_index
 from repro.data import blobs
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--backend", default="dynamic", choices=available_backends())
+ap.add_argument("--baseline", default="emz-static", choices=available_backends())
+args = ap.parse_args()
 
 n, d, batch = 12000, 8, 1000
 X, y = blobs(n=n, d=d, n_clusters=8, cluster_std=0.2, seed=3)
-k, t, eps = 10, 10, 0.5
+cfg = ClusterConfig(d=d, k=10, t=10, eps=0.5, seed=0)
 
-lsh = GridLSH(d, eps, t, seed=0)
-dyn = DynamicDBSCAN(d, k, t, eps, lsh=lsh)
-emz = EMZRecompute(d, k, t, eps, lsh=lsh)
+dyn = build_index(cfg.replace(backend=args.backend))
+emz = build_index(cfg.replace(backend=args.baseline))
 
 t_dyn = t_emz = 0.0
 ids = []
 for s in range(0, n, batch):
     xb = X[s : s + batch]
-    t0 = time.time(); ids += [dyn.add_point(p) for p in xb]; t_dyn += time.time() - t0
-    t0 = time.time(); emz_labels = emz.add_batch(xb); t_emz += time.time() - t0
+    t0 = time.time(); ids += dyn.insert_batch(xb); t_dyn += time.time() - t0
+    t0 = time.time()
+    emz.insert_batch(xb)
+    emz_lab = emz.labels()
+    t_emz += time.time() - t0
     lab = dyn.labels(ids)
     pred = np.array([lab[i] for i in ids])
+    pred_e = np.array([emz_lab[i] for i in sorted(emz_lab)])
     ari_d = adjusted_rand_index(y[: s + batch], pred)
-    ari_e = adjusted_rand_index(y[: s + batch], emz_labels)
-    print(f"n={s+batch:6d}  DyDBSCAN ARI={ari_d:.3f} ({t_dyn:5.2f}s cum)   "
-          f"EMZ ARI={ari_e:.3f} ({t_emz:5.2f}s cum)")
+    ari_e = adjusted_rand_index(y[: s + batch], pred_e)
+    print(f"n={s+batch:6d}  {args.backend} ARI={ari_d:.3f} ({t_dyn:5.2f}s cum)   "
+          f"{args.baseline} ARI={ari_e:.3f} ({t_emz:5.2f}s cum)")
 
 # sliding-window deletions: expire the first half
 t0 = time.time()
-for i in ids[: n // 2]:
-    dyn.delete_point(i)
+dyn.delete_batch(ids[: n // 2])
 print(f"deleted {n//2} points in {time.time()-t0:.2f}s "
-      f"(repair scans fired: {dyn.n_repair_scans})")
+      f"(repair scans fired: {dyn.stats().get('n_repair_scans', 0)})")
 lab = dyn.labels(ids[n // 2 :])
 pred = np.array([lab[i] for i in ids[n // 2 :]])
 print("post-expiry ARI:", round(adjusted_rand_index(y[n // 2 :], pred), 3))

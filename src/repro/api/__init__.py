@@ -1,0 +1,27 @@
+"""repro.api — one streaming-first interface over all DBSCAN engines.
+
+    from repro.api import ClusterConfig, build_index, Insert, Delete
+
+    index = build_index(ClusterConfig(d=8, k=10, t=10, eps=0.5,
+                                      backend="dynamic"))
+    ids = index.insert_batch(X)
+    index.apply([Delete(ids[0]), Insert(x_new)])
+    index.labels()                      # {idx: label}, noise = -1
+    snap = index.snapshot()             # -> restore_index(snap)
+
+Backends are string keys (``available_backends()``); new engines register
+with :func:`register_backend`.
+"""
+
+from ..core.dynamic_dbscan import NOISE  # noqa: F401
+from .config import ClusterConfig  # noqa: F401
+from .events import Delete, Insert  # noqa: F401
+from .index import ClusterIndex  # noqa: F401
+from .registry import (  # noqa: F401
+    available_backends,
+    build_index,
+    register_backend,
+    restore_index,
+)
+from . import backends as _backends  # noqa: F401  (populates the registry)
+from .backends import EulerTourIndex, RecomputeIndex  # noqa: F401

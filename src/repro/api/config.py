@@ -1,0 +1,44 @@
+"""Frozen configuration shared by every clustering backend.
+
+One ``ClusterConfig`` fully determines an index: the LSH family is seeded
+from ``(d, eps, t, seed)``, so two indices built from equal configs are
+semantically interchangeable — the basis of the backend-equivalence tests
+and of snapshot portability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    d: int                       # point dimensionality
+    k: int                       # Definition-4 core threshold
+    t: int                       # number of LSH tables
+    eps: float                   # grid cell scale (2·eps cells)
+    seed: int = 0                # LSH family + sequence-backend seed
+    backend: str = "dynamic"     # registry key, see repro.api.backends
+    repair: str = "exact"        # 'exact' (Thm-2 fix) | 'paper' (Alg. 2)
+    attach_orphans: bool = True  # DESIGN.md §3.2 border re-attachment
+
+    def __post_init__(self):
+        if self.d <= 0:
+            raise ValueError(f"d must be positive, got {self.d}")
+        if self.k < 1 or self.t < 1:
+            raise ValueError(f"k and t must be >= 1, got k={self.k} t={self.t}")
+        if self.eps <= 0:
+            raise ValueError(f"eps must be positive, got {self.eps}")
+        if self.repair not in ("exact", "paper"):
+            raise ValueError(f"unknown repair mode {self.repair!r}")
+
+    def replace(self, **changes: Any) -> "ClusterConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ClusterConfig":
+        return cls(**d)

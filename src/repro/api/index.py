@@ -1,0 +1,152 @@
+"""``ClusterIndex`` — the one streaming interface over every engine.
+
+The paper defines a single logical operation set (AddPoint / DeletePoint /
+GetCluster); this class is that operation set as an API, so consumers
+(serving, curation, benchmarks, examples) are written once and the engine
+becomes a config key.  Concrete backends adapt the four engines in
+``repro.core`` — see :mod:`repro.api.backends`.
+
+Contract notes:
+  * point indices are stable integer handles, unique among live points;
+  * ``label(idx)`` is the backend's native point query (for the dynamic
+    engines: ROOT on the Euler-tour forest, O(log n)); its value is an
+    opaque cluster id, only comparable between two live points;
+  * ``labels(ids)`` returns a canonical dense labelling with noise = -1,
+    deterministic for a given structure state;
+  * ``snapshot()`` / ``restore()`` round-trip the full structure through
+    fixed-dtype numpy arrays (npz-serialisable — see
+    ``repro.checkpoint.CheckpointManager.save_index``).
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.dynamic_dbscan import NOISE
+from .config import ClusterConfig
+from .events import Delete, Insert
+
+
+class ClusterIndex(abc.ABC):
+    NOISE = NOISE
+
+    def __init__(self, cfg: ClusterConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- #
+    # mutations
+    # ---------------------------------------------------------------- #
+    @abc.abstractmethod
+    def insert(self, x: np.ndarray, idx: Optional[int] = None) -> int:
+        """AddPoint(x) -> stable handle of the new point."""
+
+    @abc.abstractmethod
+    def delete(self, idx: int) -> None:
+        """DeletePoint(idx); raises KeyError if idx is not live."""
+
+    def insert_batch(self, X: np.ndarray,
+                     ids: Optional[Sequence[Optional[int]]] = None) -> List[int]:
+        """Insert the rows of X; backends with device hashing override
+        this to amortise the hash over the whole batch."""
+        X = np.asarray(X, dtype=np.float64)
+        if ids is not None and len(ids) != X.shape[0]:
+            raise ValueError("ids length must match batch size")
+        return [
+            self.insert(X[j], None if ids is None else ids[j])
+            for j in range(X.shape[0])
+        ]
+
+    def delete_batch(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            self.delete(i)
+
+    def apply(self, updates: Iterable[Any]) -> List[Optional[int]]:
+        """Apply a mixed stream of Insert/Delete events in order.
+
+        Returns one entry per event: the assigned handle for an Insert,
+        None for a Delete.  Maximal runs of consecutive Inserts are routed
+        through :meth:`insert_batch` so batched backends hash each run in
+        one kernel call without reordering the stream.
+        """
+        out: List[Optional[int]] = []
+        run_x: List[np.ndarray] = []
+        run_ids: List[Optional[int]] = []
+
+        def flush():
+            if run_x:
+                out.extend(self.insert_batch(np.stack(run_x), ids=run_ids))
+                run_x.clear()
+                run_ids.clear()
+
+        for ev in updates:
+            if isinstance(ev, Insert):
+                run_x.append(np.asarray(ev.x, dtype=np.float64))
+                run_ids.append(ev.idx)
+            elif isinstance(ev, Delete):
+                flush()
+                self.delete(ev.idx)
+                out.append(None)
+            else:
+                raise TypeError(f"not an Insert/Delete event: {ev!r}")
+        flush()
+        return out
+
+    # ---------------------------------------------------------------- #
+    # queries
+    # ---------------------------------------------------------------- #
+    @abc.abstractmethod
+    def label(self, idx: int) -> int:
+        """GetCluster(idx): the point's current cluster id."""
+
+    @abc.abstractmethod
+    def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
+        """Canonical labelling of ``ids`` (default: all live points);
+        noise maps to :data:`NOISE` (-1)."""
+
+    @abc.abstractmethod
+    def ids(self) -> List[int]:
+        """Sorted handles of all live points."""
+
+    @abc.abstractmethod
+    def __contains__(self, idx: int) -> bool: ...
+
+    @abc.abstractmethod
+    def __len__(self) -> int: ...
+
+    # ---------------------------------------------------------------- #
+    # persistence
+    # ---------------------------------------------------------------- #
+    @abc.abstractmethod
+    def _state(self) -> Dict[str, np.ndarray]: ...
+
+    @abc.abstractmethod
+    def _load_state(self, state: Dict[str, np.ndarray]) -> None: ...
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Serialisable structure state: ``{"config": ..., "state": ...}``
+        where every ``state`` value is a fixed-dtype numpy array."""
+        return {"config": self.cfg.to_dict(), "state": self._state()}
+
+    def restore(self, snapshot: Dict[str, Any]) -> None:
+        """Load a snapshot into this (freshly built, empty) index."""
+        cfg = ClusterConfig.from_dict(dict(snapshot["config"]))
+        if cfg != self.cfg:
+            raise ValueError(
+                f"snapshot config {cfg} does not match index config {self.cfg}"
+            )
+        if len(self):
+            raise ValueError("restore() requires an empty index")
+        self._load_state(snapshot["state"])
+
+    # ---------------------------------------------------------------- #
+    # diagnostics
+    # ---------------------------------------------------------------- #
+    def check_invariants(self) -> None:
+        """Structural self-check; no-op for recompute baselines."""
+
+    def stats(self) -> Dict[str, int]:
+        """Backend instrumentation counters (may be empty)."""
+        return {}

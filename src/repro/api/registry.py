@@ -1,0 +1,66 @@
+"""String-keyed backend registry: ``ClusterConfig.backend`` -> factory.
+
+Third-party engines plug in with::
+
+    @register_backend("my-engine")
+    def _build(cfg: ClusterConfig) -> ClusterIndex:
+        return MyIndex(cfg)
+
+and become constructible through ``build_index`` / CLI flags everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple, Union
+
+from .config import ClusterConfig
+from .index import ClusterIndex
+
+_REGISTRY: Dict[str, Callable[[ClusterConfig], ClusterIndex]] = {}
+
+
+def register_backend(name: str):
+    """Decorator registering a ``cfg -> ClusterIndex`` factory under ``name``."""
+
+    def deco(factory: Callable[[ClusterConfig], ClusterIndex]):
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def build_index(cfg: Union[ClusterConfig, str, None] = None,
+                **kwargs: Any) -> ClusterIndex:
+    """Build a ClusterIndex from a config (or backend name + config kwargs).
+
+    ``build_index(cfg)``, ``build_index("dynamic", d=8, k=10, t=10, eps=0.5)``
+    and ``build_index(d=8, ...)`` (default backend) are all accepted.
+    """
+    if isinstance(cfg, str):
+        cfg = ClusterConfig(backend=cfg, **kwargs)
+    elif cfg is None:
+        cfg = ClusterConfig(**kwargs)
+    elif kwargs:
+        cfg = cfg.replace(**kwargs)
+    try:
+        factory = _REGISTRY[cfg.backend]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {cfg.backend!r}; "
+            f"available: {', '.join(available_backends())}"
+        ) from None
+    return factory(cfg)
+
+
+def restore_index(snapshot: Dict[str, Any]) -> ClusterIndex:
+    """Rebuild a live index from a :meth:`ClusterIndex.snapshot` payload."""
+    cfg = ClusterConfig.from_dict(dict(snapshot["config"]))
+    index = build_index(cfg)
+    index.restore(snapshot)
+    return index

@@ -167,6 +167,56 @@ class CheckpointManager:
             (self.dir / f"step_{step:08d}" / "manifest.json").read_text()
         )
 
+    # ------------------------------------------------------------------ #
+    # live cluster-index checkpointing (repro.api snapshots)
+    # ------------------------------------------------------------------ #
+    def save_index(self, step: int, index) -> None:
+        """Persist a ``repro.api.ClusterIndex`` snapshot atomically.
+
+        Layout mirrors the param checkpoints: ``index_<step>/state.npz``
+        (fixed-dtype structure arrays) + ``manifest.json`` (the
+        ClusterConfig), with a temp-dir rename and an ``LATEST_INDEX``
+        pointer updated last — a crash mid-write never corrupts the
+        restore point.
+        """
+        snap = index.snapshot()
+        name = f"index_{step:08d}"
+        tmp = self.dir / f".tmp_{name}_{os.getpid()}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "state.npz", **snap["state"])
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"step": step, "config": snap["config"], "time": time.time()}
+        ))
+        final = self.dir / name
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        (self.dir / "LATEST_INDEX.tmp").write_text(name)
+        (self.dir / "LATEST_INDEX.tmp").rename(self.dir / "LATEST_INDEX")
+        steps = sorted(p for p in self.dir.glob("index_*") if p.is_dir())
+        for p in steps[: -self.keep_n]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    def latest_index_step(self) -> Optional[int]:
+        f = self.dir / "LATEST_INDEX"
+        if not f.exists():
+            return None
+        return int(f.read_text().split("_")[1])
+
+    def restore_index(self, step: Optional[int] = None):
+        """Rebuild the live ClusterIndex saved by :meth:`save_index`."""
+        from repro.api import restore_index as _restore
+
+        if step is None:
+            step = self.latest_index_step()
+        if step is None:
+            raise FileNotFoundError("no index checkpoint found")
+        d = self.dir / f"index_{step:08d}"
+        config = json.loads((d / "manifest.json").read_text())["config"]
+        with np.load(d / "state.npz") as z:
+            state = {k: z[k] for k in z.files}
+        return _restore({"config": config, "state": state})
+
 
 def _spec_to_json(spec):
     if spec is None:

@@ -19,15 +19,16 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .dynamic_dbscan import DynamicDBSCAN
+from .dynamic_dbscan import DynamicDBSCAN, claim_index
 from .hashing import GridLSH
 
 
 class BatchedDynamicDBSCAN(DynamicDBSCAN):
     def __init__(self, d, k, t, eps, seed: int = 0, use_device: bool = False,
-                 attach_orphans: bool = True, lsh: Optional[GridLSH] = None):
+                 attach_orphans: bool = True, lsh: Optional[GridLSH] = None,
+                 repair: str = "exact"):
         super().__init__(d, k, t, eps, seed=seed,
-                         attach_orphans=attach_orphans, lsh=lsh)
+                         attach_orphans=attach_orphans, lsh=lsh, repair=repair)
         self.use_device = use_device
         self._jax_fn = None
 
@@ -57,16 +58,29 @@ class BatchedDynamicDBSCAN(DynamicDBSCAN):
         )
 
     def add_point(self, x: np.ndarray, idx: Optional[int] = None) -> int:
-        return self.add_batch(np.asarray(x, dtype=np.float64)[None])[0]
+        return self.add_batch(
+            np.asarray(x, dtype=np.float64)[None], ids=[idx]
+        )[0]
 
-    def add_batch(self, X: np.ndarray) -> List[int]:
-        """Hash the whole batch in one kernel call, then apply updates."""
+    def add_batch(self, X: np.ndarray,
+                  ids: Optional[Sequence[Optional[int]]] = None) -> List[int]:
+        """Hash the whole batch in one kernel call, then apply updates.
+
+        ``ids`` optionally pins explicit indices (None entries auto-assign),
+        mirroring the parent class's ``add_point(x, idx)`` contract.
+        """
         X = np.asarray(X, dtype=np.float64)
+        if X.ndim != 2 or X.shape[1] != self.d:
+            raise ValueError(f"batch shape {X.shape} != (n, {self.d})")
+        if ids is not None and len(ids) != X.shape[0]:
+            raise ValueError("ids length must match batch size")
         keys = self._keys_of_batch(X)
         out = []
         for j in range(X.shape[0]):
-            idx = self._next_idx
-            self._next_idx += 1
+            idx, self._next_idx = claim_index(
+                self.points, self._next_idx,
+                ids[j] if ids is not None else None,
+            )
             out.append(self._add_with_keys(X[j], keys[j], idx))
         return out
 

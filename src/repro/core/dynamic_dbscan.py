@@ -29,6 +29,63 @@ from .hashing import GridLSH
 
 NOISE = -1
 
+try:  # optional fast path, resolved once (labels() is per-batch hot)
+    import scipy.sparse as _sp
+    from scipy.sparse.csgraph import connected_components as _scipy_cc
+except ImportError:  # pragma: no cover - exercised via tests monkeypatching
+    _sp = None
+
+
+def claim_index(live, next_idx: int, idx: Optional[int]):
+    """Resolve an explicit-or-auto point handle against a live-id set.
+
+    Shared by every engine/adapter so handle assignment is identical
+    across backends (the premise of the equivalence tests).  Returns
+    ``(idx, new_next_idx)``; raises KeyError on duplicates.
+    """
+    if idx is None:
+        idx = next_idx
+    elif idx in live:
+        raise KeyError(f"index {idx} already present")
+    return idx, max(next_idx, idx + 1)
+
+
+def _connected_components(n: int, rows: List[int], cols: List[int]) -> np.ndarray:
+    """Component id per position 0..n-1, numbered by first occurrence.
+
+    scipy (when importable) and the pure-Python union-find fallback produce
+    identical labellings: both number components in ascending order of
+    their smallest member position.
+    """
+    if _sp is None:
+        parent = list(range(n))
+
+        def find(a: int) -> int:
+            root = a
+            while parent[root] != root:
+                root = parent[root]
+            while parent[a] != root:  # path compression
+                parent[a], a = root, parent[a]
+            return root
+
+        for a, b in zip(rows, cols):
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                # union by smaller root id ⇒ each root is its component's
+                # minimum, giving first-occurrence numbering below
+                if rb < ra:
+                    ra, rb = rb, ra
+                parent[rb] = ra
+        comp = np.empty(n, dtype=np.int64)
+        relabel: Dict[int, int] = {}
+        for pos in range(n):
+            r = find(pos)
+            comp[pos] = relabel.setdefault(r, len(relabel))
+        return comp
+    g = _sp.coo_matrix((np.ones(len(rows)), (rows, cols)), shape=(n, n))
+    _, comp = _scipy_cc(g, directed=False)
+    return comp
+
 
 class DynamicDBSCAN:
     def __init__(
@@ -71,12 +128,10 @@ class DynamicDBSCAN:
     # ------------------------------------------------------------------ #
     def add_point(self, x: np.ndarray, idx: Optional[int] = None) -> int:
         """AddPoint(x).  Returns the point's index (stable handle)."""
-        if idx is None:
-            idx = self._next_idx
-        elif idx in self.points:
-            raise KeyError(f"index {idx} already present")
-        self._next_idx = max(self._next_idx, idx + 1)
+        idx, self._next_idx = claim_index(self.points, self._next_idx, idx)
         x = np.asarray(x, dtype=np.float64)
+        if x.shape != (self.d,):
+            raise ValueError(f"point shape {x.shape} != ({self.d},)")
         keys = self.lsh.keys(x)
         return self._add_with_keys(x, keys, idx)
 
@@ -159,12 +214,12 @@ class DynamicDBSCAN:
     def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
         """Cluster labels; noise (unattached non-core) -> NOISE.
 
-        Uses one vectorised connected-components pass over the forest's
-        edge list (O(n)) instead of n ROOT queries; identical partition.
+        Uses one connected-components pass over the forest's edge list
+        (O(n α(n))) instead of n ROOT queries; identical partition.
+        scipy's C-speed ``connected_components`` is used when importable;
+        otherwise a pure-Python union-find with the same labelling
+        (components numbered by first occurrence in ``ids`` order).
         """
-        import scipy.sparse as sp
-        from scipy.sparse.csgraph import connected_components
-
         ids = list(self.points.keys()) if ids is None else list(ids)
         id_to_pos = {v: i for i, v in enumerate(ids)}
         rows, cols = [], []
@@ -176,11 +231,7 @@ class DynamicDBSCAN:
             if u in id_to_pos and v in id_to_pos:
                 rows.append(id_to_pos[u])
                 cols.append(id_to_pos[v])
-        n = len(ids)
-        g = sp.coo_matrix(
-            (np.ones(len(rows)), (rows, cols)), shape=(n, n)
-        )
-        _, comp = connected_components(g, directed=False)
+        comp = _connected_components(len(ids), rows, cols)
         out: Dict[int, int] = {}
         for v, pos in id_to_pos.items():
             if self.support[v] == 0 and self.attach[v] is None:
@@ -188,6 +239,75 @@ class DynamicDBSCAN:
             else:
                 out[v] = int(comp[pos])
         return out
+
+    # ------------------------------------------------------------------ #
+    # checkpointable state (used by repro.api snapshot/restore)
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Full structural state as fixed-dtype arrays (npz-serialisable).
+
+        Bucket keys are raw bytes of constant width (exact codes: 8·d;
+        mixed device keys: 8), stored as a uint8 tensor.  Forest edges are
+        stored explicitly so ``load_state_dict`` restores the *exact*
+        spanning forest — border-point anchors are history-dependent, so a
+        replay-based restore could legally land them in another cluster.
+        """
+        ids = sorted(self.points)
+        n = len(ids)
+        d = self.d
+        points = np.zeros((n, d), dtype=np.float64)
+        support = np.zeros(n, dtype=np.int64)
+        attach = np.full(n, -1, dtype=np.int64)
+        keylen = len(self.keys[ids[0]][0]) if n else 0
+        keys = np.zeros((n, self.t, keylen), dtype=np.uint8)
+        for j, i in enumerate(ids):
+            points[j] = self.points[i]
+            support[j] = self.support[i]
+            if self.attach[i] is not None:
+                attach[j] = self.attach[i]
+            for ti, key in enumerate(self.keys[i]):
+                keys[j, ti] = np.frombuffer(key, dtype=np.uint8)
+        edges = sorted(
+            (u, v) for (u, v) in self.forest._edge if u < v
+        )
+        return {
+            "ids": np.asarray(ids, dtype=np.int64),
+            "points": points,
+            "keys": keys,
+            "support": support,
+            "attach": attach,
+            "edges": np.asarray(edges, dtype=np.int64).reshape(-1, 2),
+            "next_idx": np.asarray(self._next_idx, dtype=np.int64),
+        }
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore a :meth:`state_dict` into this (empty) instance."""
+        if self.points:
+            raise ValueError("load_state_dict requires an empty structure")
+        ids = [int(i) for i in state["ids"]]
+        points = np.asarray(state["points"], dtype=np.float64)
+        keys = np.asarray(state["keys"], dtype=np.uint8)
+        support = np.asarray(state["support"], dtype=np.int64)
+        attach = np.asarray(state["attach"], dtype=np.int64)
+        for j, i in enumerate(ids):
+            self.points[i] = points[j]
+            self.keys[i] = [keys[j, ti].tobytes() for ti in range(self.t)]
+            self.support[i] = int(support[j])
+            self.attach[i] = int(attach[j]) if attach[j] >= 0 else None
+            self.forest.add_node(i)
+            for ti, key in enumerate(self.keys[i]):
+                b = self.buckets.get_or_create(ti, key)
+                b.members.add(i)
+                if support[j] > 0:
+                    b.add_core(i)
+        for i in ids:
+            a = self.attach[i]
+            if a is not None:
+                self.anchored.setdefault(a, set()).add(i)
+        for u, v in np.asarray(state["edges"], dtype=np.int64).reshape(-1, 2):
+            if not self.forest.link(int(u), int(v)):
+                raise ValueError(f"edge ({u}, {v}) does not extend a forest")
+        self._next_idx = int(state["next_idx"])
 
     # ------------------------------------------------------------------ #
     # internal: Alg. 2 subroutines

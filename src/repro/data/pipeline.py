@@ -23,8 +23,7 @@ from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
 
-from ..core import DynamicDBSCAN, NOISE
-from ..core.batched import BatchedDynamicDBSCAN
+from ..api import ClusterConfig, NOISE, build_index
 
 
 class SyntheticTokenStream:
@@ -66,9 +65,10 @@ class CurationFilter:
     def __init__(self, d: int, k: int = 10, t: int = 10, eps: float = 0.75,
                  policy: str = "balance", window: int = 50_000,
                  max_per_cluster_frac: float = 0.25, seed: int = 0,
-                 use_batched: bool = True):
-        cls = BatchedDynamicDBSCAN if use_batched else DynamicDBSCAN
-        self.dbscan = cls(d, k, t, eps, seed=seed)
+                 backend: str = "batched"):
+        self.index = build_index(
+            ClusterConfig(d=d, k=k, t=t, eps=eps, seed=seed, backend=backend)
+        )
         self.policy = policy
         self.window = window
         self.max_frac = max_per_cluster_frac
@@ -79,17 +79,14 @@ class CurationFilter:
     def filter(self, embeddings: np.ndarray) -> np.ndarray:
         """Returns a boolean keep-mask for the rows of ``embeddings``."""
         n = embeddings.shape[0]
-        if hasattr(self.dbscan, "add_batch"):
-            ids = self.dbscan.add_batch(embeddings)
-        else:
-            ids = [self.dbscan.add_point(embeddings[j]) for j in range(n)]
+        ids = self.index.insert_batch(embeddings)
         self._fifo.extend(ids)
         # expire old points (sliding window -> DeletePoint workload)
         while len(self._fifo) > self.window:
-            self.dbscan.delete_point(self._fifo.pop(0))
-        labels = self.dbscan.labels(ids)
+            self.index.delete(self._fifo.pop(0))
+        labels = self.index.labels(ids)
         sizes: Dict[int, int] = {}
-        all_labels = self.dbscan.labels()
+        all_labels = self.index.labels()
         for v in all_labels.values():
             sizes[v] = sizes.get(v, 0) + 1
         total = max(1, len(all_labels))
@@ -103,7 +100,7 @@ class CurationFilter:
                     sizes.get(lab, 0) / total <= self.max_frac
                 )
             elif self.policy == "dedup":
-                keep[j] = (lab == NOISE) or sizes.get(lab, 0) < self.dbscan.k * 4
+                keep[j] = (lab == NOISE) or sizes.get(lab, 0) < self.index.cfg.k * 4
         self.n_seen += n
         self.n_kept += int(keep.sum())
         return keep

@@ -22,7 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-shard_map = jax.shard_map
+try:  # jax >= 0.4.35 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace + old kwarg name
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, /, **kw):
+        kw["check_rep"] = kw.pop("check_vma", False)
+        return _shard_map(f, **kw)
 
 from . import layers as L
 

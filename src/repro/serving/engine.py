@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.batched import BatchedDynamicDBSCAN
+from ..api import ClusterConfig, build_index
 from ..models.registry import ModelAPI
 
 
@@ -40,7 +40,8 @@ class Request:
 class ServingEngine:
     def __init__(self, model: ModelAPI, params, batch: int, kv_len: int,
                  eos_id: int = -1, cluster_requests: bool = False,
-                 embed_dim: int = 8, mesh=None):
+                 embed_dim: int = 8, mesh=None,
+                 cluster_backend: str = "batched"):
         self.model = model
         self.params = params
         self.B = batch
@@ -58,7 +59,8 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         self.clusterer = (
-            BatchedDynamicDBSCAN(embed_dim, k=4, t=6, eps=0.6)
+            build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
+                                      backend=cluster_backend))
             if cluster_requests else None
         )
         self._req_window: List[int] = []
@@ -67,11 +69,11 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         req.out_tokens = []
         if self.clusterer is not None and req.embedding is not None:
-            idx = self.clusterer.add_batch(req.embedding[None])[0]
-            req.cluster = self.clusterer.get_cluster(idx)
+            idx = self.clusterer.insert_batch(req.embedding[None])[0]
+            req.cluster = self.clusterer.label(idx)
             self._req_window.append(idx)
             if len(self._req_window) > 4 * self.B:
-                self.clusterer.delete_point(self._req_window.pop(0))
+                self.clusterer.delete(self._req_window.pop(0))
         self.queue.append(req)
 
     def _schedule(self) -> None:

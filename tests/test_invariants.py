@@ -9,6 +9,9 @@ Invariants under arbitrary update sequences (paper §4.2 / Thm 2):
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

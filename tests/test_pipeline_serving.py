@@ -38,8 +38,8 @@ def test_curation_sliding_window_deletes():
     rng = np.random.default_rng(1)
     for _ in range(6):
         cf.filter(rng.normal(size=(20, 3)))
-    assert len(cf.dbscan.points) <= 50
-    cf.dbscan.check_invariants()
+    assert len(cf.index) <= 50
+    cf.index.check_invariants()
 
 
 def test_pipeline_prefetch_and_fixed_shape():
