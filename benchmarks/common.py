@@ -25,6 +25,14 @@ ALGO_TO_BACKEND = {
 }
 
 
+def with_shards(cfg: ClusterConfig, backend: str, shards: int = 0) -> ClusterConfig:
+    """Resolve a --backend/--shards CLI pair into a config (legacy algo
+    aliases accepted); the wrap convention itself lives on
+    ``ClusterConfig.with_shards``."""
+    backend = ALGO_TO_BACKEND.get(backend, backend)
+    return cfg.replace(backend=backend).with_shards(shards)
+
+
 def stream_eval(
     name: str,
     X: np.ndarray,
@@ -36,14 +44,19 @@ def stream_eval(
     seed: int = 0,
     algos=("dynamic", "emz-static", "naive"),
     eval_every: Optional[int] = None,
+    shards: int = 0,
 ) -> Dict[str, Dict]:
-    """Run the paper's streaming protocol; returns per-algo time/ARI/NMI."""
+    """Run the paper's streaming protocol; returns per-algo time/ARI/NMI.
+
+    ``shards`` > 1 shards the engine under test (the FIRST algo); the
+    baseline columns stay unsharded for comparability."""
     cfg = ClusterConfig(d=X.shape[1], k=k, t=t, eps=eps, seed=seed)
     out: Dict[str, Dict] = {}
 
-    for algo in algos:
+    for pos, algo in enumerate(algos):
         backend = ALGO_TO_BACKEND.get(algo, algo)
-        index = build_index(cfg.replace(backend=backend))
+        index = build_index(with_shards(cfg, backend,
+                                        shards if pos == 0 else 0))
         t_total = 0.0
         ids = []
         lab: Dict[int, int] = {}

@@ -18,19 +18,21 @@ from repro.api import ClusterConfig, build_index
 from repro.core import adjusted_rand_index
 from repro.data import blobs
 
+from .common import with_shards
+
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
 
 
 def run_panel(order: str, n: int = 20000, batch: int = 1000, seed: int = 0,
-              backend: str = "dynamic"):
+              backend: str = "dynamic", shards: int = 0):
     X, y = blobs(n=n, d=10, n_clusters=10, cluster_std=0.25, seed=seed)
     if order == "cluster":
         idx = np.argsort(y, kind="stable")
         X, y = X[idx], y[idx]
     cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed)
     algos = {
-        b: build_index(cfg.replace(backend=b))
+        b: build_index(with_shards(cfg, b, shards if b == backend else 0))
         for b in dict.fromkeys((backend, "emz-static", "emz-fixed"))
     }
     curve = {a: {"n": [], "ari": [], "cum_time": []} for a in algos}
@@ -56,17 +58,20 @@ def main(argv=None):
     ap.add_argument("--panel", default="all", choices=["a", "b", "c", "all"])
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--backend", default="dynamic")
+    ap.add_argument("--shards", type=int, default=0)
     args = ap.parse_args(argv)
     out = {}
     if args.panel in ("a", "b", "all"):
         print("== random arrival (panels a+b)")
-        out["random"] = run_panel("random", n=args.n, backend=args.backend)
+        out["random"] = run_panel("random", n=args.n, backend=args.backend,
+                                  shards=args.shards)
         for a, c in out["random"].items():
             print(f"  {a:10} final ARI={c['ari'][-1]:.3f} "
                   f"total={c['cum_time'][-1]:.2f}s")
     if args.panel in ("c", "all"):
         print("== cluster-by-cluster arrival (panel c)")
-        out["cluster"] = run_panel("cluster", n=args.n, backend=args.backend)
+        out["cluster"] = run_panel("cluster", n=args.n, backend=args.backend,
+                                   shards=args.shards)
         for a, c in out["cluster"].items():
             print(f"  {a:10} final ARI={c['ari'][-1]:.3f} "
                   f"total={c['cum_time'][-1]:.2f}s")

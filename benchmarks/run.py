@@ -17,12 +17,19 @@ def main(argv=None) -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny streams for CI: blobs-only table2, small n")
     ap.add_argument("--only", default=None,
-                    choices=["table2", "figure2", "scaling", "kernels",
-                             "ablations", "paper_roofline", "roofline"])
+                    choices=["table2", "figure2", "scaling", "shards",
+                             "kernels", "ablations", "paper_roofline",
+                             "roofline"])
     ap.add_argument("--backend", default="dynamic",
                     choices=available_backends(),
                     help="repro.api backend for the dynamic engine under test")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard the engine under test across S key ranges "
+                         "(backend=sharded; any other backend becomes the "
+                         "inner engine)")
     args = ap.parse_args(argv)
 
     csv_rows = []
@@ -33,9 +40,11 @@ def main(argv=None) -> None:
     if args.only in (None, "table2"):
         print("\n===== Table 2: streaming time / ARI / NMI =====")
         from .table2 import run as t2
-        rows = t2(scale=1.0 if args.full else 0.05,
+        rows = t2(scale=1.0 if args.full else (0.02 if args.smoke else 0.05),
+                  datasets=["blobs"] if args.smoke else None,
                   algos=tuple(dict.fromkeys(
-                      (args.backend, "emz-static", "emz-fixed", "naive"))))
+                      (args.backend, "emz-static", "emz-fixed", "naive"))),
+                  shards=args.shards)
         for r in rows:
             emit(f"table2/{r['dataset']}/{r['algo']}",
                  r["time_s"] * 1e6,
@@ -44,8 +53,9 @@ def main(argv=None) -> None:
     if args.only in (None, "figure2"):
         print("\n===== Figure 2: blobs arrival-order study =====")
         from .figure2 import main as f2
-        out = f2(["--n", "20000" if args.full else "8000",
-                  "--backend", args.backend])
+        out = f2(["--n", "20000" if args.full else
+                  ("2000" if args.smoke else "8000"),
+                  "--backend", args.backend, "--shards", str(args.shards)])
         for order, curves in out.items():
             for algo, c in curves.items():
                 emit(f"figure2/{order}/{algo}", c["cum_time"][-1] * 1e6,
@@ -54,10 +64,25 @@ def main(argv=None) -> None:
     if args.only in (None, "scaling"):
         print("\n===== Update-complexity scaling (Thm 1 / Remark 1) =====")
         from .scaling import run as sc
-        rows = sc(max_n=64000 if args.full else 16000, backend=args.backend)
+        rows = sc(max_n=64000 if args.full else
+                  (4000 if args.smoke else 16000),
+                  backend=args.backend, shards=args.shards)
         for r in rows:
             emit(f"scaling/n{r['n']}", r["dyn_per_update_us"],
                  f"emz_recompute={r['emz_recompute_s']:.3f}s")
+
+    if args.only == "shards" or (args.only is None and args.shards > 1):
+        print("\n===== Shard-count scaling (update throughput vs S) =====")
+        from .scaling import run_shards as ss
+        inner = args.backend if args.backend != "sharded" else "batched"
+        rows = ss((1, 2, 4, 8) if not args.smoke else (1, args.shards or 2),
+                  max_n=16000 if args.full else
+                  (2000 if args.smoke else 8000),
+                  inner=inner)
+        for r in rows:
+            emit(f"shards/S{r['shards']}", r["us_per_update"],
+                 f"updates_per_s={r['updates_per_s']:.0f};"
+                 f"boundary={r['n_boundary_buckets']}")
 
     if args.only in (None, "kernels"):
         print("\n===== Kernel / batched-update benches =====")

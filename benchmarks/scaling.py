@@ -1,7 +1,11 @@
 """Per-update complexity scaling (Theorem 1 / Remark 1): DynamicDBSCAN's
 per-update time should grow polylogarithmically with the number of live
 points n, while one EMZ *recompute* grows ~linearly in n.  This is the
-paper's central speedup claim, measured directly."""
+paper's central speedup claim, measured directly.
+
+``--shards 1 2 4 8`` runs the shard-count sweep instead: per-update
+throughput of ``backend="sharded"`` vs S on a mixed insert/delete stream
+(results/scaling_shards.json)."""
 
 from __future__ import annotations
 
@@ -16,17 +20,19 @@ from repro.api import ClusterConfig, build_index
 from repro.core import GridLSH, emz_cluster
 from repro.data import blobs
 
+from .common import with_shards
+
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
 
 
 def run(max_n: int = 64000, probe: int = 200, seed: int = 0,
-        backend: str = "dynamic"):
+        backend: str = "dynamic", shards: int = 0):
     X, _ = blobs(n=max_n + probe, d=10, n_clusters=10, seed=seed)
     d = X.shape[1]
     lsh = GridLSH(d, EPS, T, seed=seed)
-    dyn = build_index(ClusterConfig(d=d, k=K, t=T, eps=EPS, seed=seed,
-                                    backend=backend))
+    dyn = build_index(with_shards(
+        ClusterConfig(d=d, k=K, t=T, eps=EPS, seed=seed), backend, shards))
     rows = []
     n = 0
     checkpoints = [1000 * 2 ** i for i in range(20) if 1000 * 2 ** i <= max_n]
@@ -61,12 +67,78 @@ def run(max_n: int = 64000, probe: int = 200, seed: int = 0,
     return rows
 
 
+def run_shards(shards=(1, 2, 4, 8), max_n: int = 16000, batch: int = 1000,
+               probe_rounds: int = 4, seed: int = 0,
+               inner: str = "batched"):
+    """Per-update throughput vs shard count S on a mixed workload.
+
+    Each S builds ``backend="sharded"`` (inner engine = ``inner``), fills
+    to ``max_n`` live points in batched runs, then times ``probe_rounds``
+    rounds of (insert one batch, delete the oldest batch) — the sliding-
+    window update mix the serving engine produces.  An unsharded ``inner``
+    reference row is included as shards=0.
+    """
+    X, _ = blobs(n=max_n + batch * (probe_rounds + 1), d=10, n_clusters=10,
+                 seed=seed)
+    rows = []
+    for S in (0, *shards):
+        cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed)
+        cfg = (cfg.replace(backend=inner) if S == 0 else
+               cfg.replace(backend="sharded", shards=S, inner_backend=inner))
+        index = build_index(cfg)
+        ids = []
+        n = 0
+        t_fill = time.perf_counter()
+        while n < max_n:
+            ids.extend(index.insert_batch(X[n:n + batch]))
+            n += batch
+        t_fill = time.perf_counter() - t_fill
+        t0 = time.perf_counter()
+        for _ in range(probe_rounds):
+            ids.extend(index.insert_batch(X[n:n + batch]))
+            n += batch
+            index.delete_batch(ids[:batch])
+            ids = ids[batch:]
+        dt = time.perf_counter() - t0
+        updates = 2 * batch * probe_rounds
+        t0 = time.perf_counter()
+        n_clusters = len({v for v in index.labels().values() if v >= 0})
+        t_labels = time.perf_counter() - t0
+        stats = index.stats()
+        rows.append({
+            "shards": S,
+            "inner": inner,
+            "live_points": len(index),
+            "updates_per_s": updates / dt,
+            "us_per_update": dt / updates * 1e6,
+            "fill_s": t_fill,
+            "labels_s": t_labels,
+            "n_clusters": n_clusters,
+            "n_boundary_buckets": stats.get("n_boundary_buckets", 0),
+        })
+        print(f"shards={S or 'off':>3}  {rows[-1]['updates_per_s']:10.0f} "
+              f"updates/s  ({rows[-1]['us_per_update']:8.1f} us/update)  "
+              f"labels()={t_labels*1e3:7.1f}ms  "
+              f"boundary_buckets={rows[-1]['n_boundary_buckets']}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "scaling_shards.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--max-n", type=int, default=32000)
     ap.add_argument("--backend", default="dynamic")
+    ap.add_argument("--shards", type=int, nargs="+", default=None,
+                    help="run the shard-count sweep instead, e.g. "
+                         "--shards 1 2 4 8")
+    ap.add_argument("--inner", default="batched",
+                    help="inner engine for the shard sweep")
     args = ap.parse_args(argv)
-    run(max_n=args.max_n, backend=args.backend)
+    if args.shards:
+        run_shards(tuple(args.shards), max_n=args.max_n, inner=args.inner)
+    else:
+        run(max_n=args.max_n, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,8 @@ RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
 
 
-def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0):
+def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0,
+        shards: int = 0):
     datasets = datasets or ["letter", "mnist", "fashion-mnist", "blobs"]
     algos = algos or ("dynamic", "emz-static", "emz-fixed", "naive")
     rows = []
@@ -38,7 +39,8 @@ def run(scale: float = 0.1, datasets=None, algos=None, seed: int = 0):
         # exact DBSCAN is O(n^2): cap its dataset size
         use = tuple(a for a in algos
                     if not (a in ("naive", "sklearn") and len(X) > 25000))
-        res = stream_eval(name, X, y, k=K, t=T, eps=EPS, seed=seed, algos=use)
+        res = stream_eval(name, X, y, k=K, t=T, eps=EPS, seed=seed, algos=use,
+                          shards=shards)
         for algo, m in res.items():
             rows.append({"dataset": name, "n": len(X), "algo": algo, **m})
             print(f"{name:15} n={len(X):7d} {algo:12} "
@@ -56,10 +58,13 @@ def main(argv=None):
     ap.add_argument("--datasets", nargs="*", default=None)
     ap.add_argument("--backend", default="dynamic",
                     help="repro.api backend for the dynamic column")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard the engine under test across S key ranges")
     args = ap.parse_args(argv)
     run(scale=1.0 if args.full else args.scale, datasets=args.datasets,
         algos=tuple(dict.fromkeys(
-            (args.backend, "emz-static", "emz-fixed", "naive"))))
+            (args.backend, "emz-static", "emz-fixed", "naive"))),
+        shards=args.shards)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ a CLI flag:
 
     PYTHONPATH=src python examples/streaming_clustering.py
     PYTHONPATH=src python examples/streaming_clustering.py --backend batched
+    PYTHONPATH=src python examples/streaming_clustering.py --backend batched --shards 4
 """
 import argparse
 import time
@@ -19,13 +20,15 @@ from repro.data import blobs
 ap = argparse.ArgumentParser()
 ap.add_argument("--backend", default="dynamic", choices=available_backends())
 ap.add_argument("--baseline", default="emz-static", choices=available_backends())
+ap.add_argument("--shards", type=int, default=0,
+                help="shard the engine under test across S LSH key ranges")
 args = ap.parse_args()
 
 n, d, batch = 12000, 8, 1000
 X, y = blobs(n=n, d=d, n_clusters=8, cluster_std=0.2, seed=3)
 cfg = ClusterConfig(d=d, k=10, t=10, eps=0.5, seed=0)
 
-dyn = build_index(cfg.replace(backend=args.backend))
+dyn = build_index(cfg.replace(backend=args.backend).with_shards(args.shards))
 emz = build_index(cfg.replace(backend=args.baseline))
 
 t_dyn = t_emz = 0.0

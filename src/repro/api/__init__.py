@@ -22,6 +22,16 @@ from .registry import (  # noqa: F401
     build_index,
     register_backend,
     restore_index,
+    unregister_backend,
 )
 from . import backends as _backends  # noqa: F401  (populates the registry)
 from .backends import EulerTourIndex, RecomputeIndex  # noqa: F401
+# module (not name) import: repro.shard may be mid-initialisation when it
+# is what pulled repro.api in; it registers "sharded" when it completes
+from .. import shard as _shard  # noqa: F401
+
+
+def __getattr__(name):  # PEP 562: late-bound re-export
+    if name == "ShardedIndex":
+        return _shard.ShardedIndex
+    raise AttributeError(name)

@@ -9,7 +9,7 @@ and of snapshot portability.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,19 +22,47 @@ class ClusterConfig:
     backend: str = "dynamic"     # registry key, see repro.api.backends
     repair: str = "exact"        # 'exact' (Thm-2 fix) | 'paper' (Alg. 2)
     attach_orphans: bool = True  # DESIGN.md §3.2 border re-attachment
+    shards: int = 1              # backend="sharded": number of key ranges
+    inner_backend: str = "dynamic"  # backend="sharded": per-shard engine
 
     def __post_init__(self):
-        if self.d <= 0:
-            raise ValueError(f"d must be positive, got {self.d}")
-        if self.k < 1 or self.t < 1:
-            raise ValueError(f"k and t must be >= 1, got k={self.k} t={self.t}")
+        # Validate at construction with named messages instead of failing
+        # deep inside GridLSH.__init__ / the engine constructors.
+        if self.d < 1:
+            raise ValueError(f"d must be >= 1, got {self.d}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.t < 1:
+            raise ValueError(f"t must be >= 1, got {self.t}")
         if self.eps <= 0:
-            raise ValueError(f"eps must be positive, got {self.eps}")
+            raise ValueError(f"eps must be > 0, got {self.eps}")
         if self.repair not in ("exact", "paper"):
             raise ValueError(f"unknown repair mode {self.repair!r}")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.inner_backend == "sharded":
+            raise ValueError("inner_backend cannot itself be 'sharded'")
 
     def replace(self, **changes: Any) -> "ClusterConfig":
         return dataclasses.replace(self, **changes)
+
+    def with_shards(self, shards: int,
+                    inner: Optional[str] = None) -> "ClusterConfig":
+        """Resolve a shard-count request against this config — the one
+        definition of the '--shards S' CLI convention.
+
+        ``shards > 1`` wraps this config's backend into ``sharded`` with
+        the current backend (or ``inner``) as the per-shard engine; an
+        already-``sharded`` config just updates its shard count;
+        ``shards <= 1`` on an unsharded config is a no-op.
+        """
+        if self.backend == "sharded":
+            return self.replace(shards=max(1, shards),
+                                **({"inner_backend": inner} if inner else {}))
+        if shards and shards > 1:
+            return self.replace(backend="sharded", shards=shards,
+                                inner_backend=inner or self.backend)
+        return self
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

@@ -25,7 +25,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.dynamic_dbscan import NOISE
+from ..core.dynamic_dbscan import NOISE, check_unique_ids
 from .config import ClusterConfig
 from .events import Delete, Insert
 
@@ -60,6 +60,10 @@ class ClusterIndex(abc.ABC):
         ]
 
     def delete_batch(self, ids: Sequence[int]) -> None:
+        """Delete ``ids``; a duplicate id within one call raises KeyError
+        naming the offending id (matching ``insert_batch``'s duplicate-pin
+        behavior) before any point is removed."""
+        check_unique_ids(ids)
         for i in ids:
             self.delete(i)
 

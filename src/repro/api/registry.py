@@ -19,16 +19,35 @@ from .index import ClusterIndex
 _REGISTRY: Dict[str, Callable[[ClusterConfig], ClusterIndex]] = {}
 
 
-def register_backend(name: str):
-    """Decorator registering a ``cfg -> ClusterIndex`` factory under ``name``."""
+def register_backend(name: str, overwrite: bool = False):
+    """Decorator registering a ``cfg -> ClusterIndex`` factory under ``name``.
+
+    Re-registering an existing name raises unless ``overwrite=True`` —
+    tests (and e.g. the sharded backend's inner-engine fixtures) use
+    ``overwrite=True`` / :func:`unregister_backend` to swap factories.
+    """
 
     def deco(factory: Callable[[ClusterConfig], ClusterIndex]):
-        if name in _REGISTRY:
-            raise ValueError(f"backend {name!r} already registered")
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"backend {name!r} already registered "
+                "(pass overwrite=True to replace it)"
+            )
         _REGISTRY[name] = factory
         return factory
 
     return deco
+
+
+def unregister_backend(name: str) -> None:
+    """Remove ``name`` from the registry; raises KeyError if unknown."""
+    try:
+        del _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"backend {name!r} is not registered; "
+            f"available: {', '.join(available_backends())}"
+        ) from None
 
 
 def available_backends() -> Tuple[str, ...]:

@@ -19,7 +19,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .dynamic_dbscan import DynamicDBSCAN, claim_index
+from .dynamic_dbscan import DynamicDBSCAN, check_unique_ids, claim_index
 from .hashing import GridLSH
 
 
@@ -85,5 +85,6 @@ class BatchedDynamicDBSCAN(DynamicDBSCAN):
         return out
 
     def delete_batch(self, ids: Sequence[int]) -> None:
+        check_unique_ids(ids)
         for i in ids:
             self.delete_point(i)

@@ -50,6 +50,17 @@ def claim_index(live, next_idx: int, idx: Optional[int]):
     return idx, max(next_idx, idx + 1)
 
 
+def check_unique_ids(ids) -> None:
+    """Raise KeyError naming the first id appearing twice in ``ids`` —
+    the shared ``delete_batch`` precondition (mirrors ``claim_index``'s
+    duplicate-pin behavior on the insert side)."""
+    seen = set()
+    for i in ids:
+        if i in seen:
+            raise KeyError(f"duplicate id {i} in delete_batch")
+        seen.add(i)
+
+
 def _connected_components(n: int, rows: List[int], cols: List[int]) -> np.ndarray:
     """Component id per position 0..n-1, numbered by first occurrence.
 

@@ -65,9 +65,11 @@ class CurationFilter:
     def __init__(self, d: int, k: int = 10, t: int = 10, eps: float = 0.75,
                  policy: str = "balance", window: int = 50_000,
                  max_per_cluster_frac: float = 0.25, seed: int = 0,
-                 backend: str = "batched"):
+                 backend: str = "batched", shards: int = 1):
+        # shards > 1 shards the window by LSH key range (backend = inner)
         self.index = build_index(
-            ClusterConfig(d=d, k=k, t=t, eps=eps, seed=seed, backend=backend)
+            ClusterConfig(d=d, k=k, t=t, eps=eps, seed=seed,
+                          backend=backend).with_shards(shards)
         )
         self.policy = policy
         self.window = window

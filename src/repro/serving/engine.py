@@ -41,7 +41,8 @@ class ServingEngine:
     def __init__(self, model: ModelAPI, params, batch: int, kv_len: int,
                  eos_id: int = -1, cluster_requests: bool = False,
                  embed_dim: int = 8, mesh=None,
-                 cluster_backend: str = "batched"):
+                 cluster_backend: str = "batched",
+                 cluster_shards: int = 1):
         self.model = model
         self.params = params
         self.B = batch
@@ -58,9 +59,12 @@ class ServingEngine:
         self.slot_pos = np.zeros(batch, dtype=np.int64)
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
+        # cluster_shards > 1 shards the request-clustering window by LSH
+        # key range (cluster_backend becomes the per-shard inner engine)
         self.clusterer = (
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
-                                      backend=cluster_backend))
+                                      backend=cluster_backend)
+                        .with_shards(cluster_shards))
             if cluster_requests else None
         )
         self._req_window: List[int] = []

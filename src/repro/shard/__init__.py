@@ -1,0 +1,24 @@
+"""repro.shard — sharded ClusterIndex with LSH key-range routing.
+
+    from repro.api import ClusterConfig, build_index
+
+    index = build_index(ClusterConfig(d=8, k=10, t=10, eps=0.5,
+                                      backend="sharded", shards=4,
+                                      inner_backend="batched"))
+
+Everything downstream of ``build_index`` (serving, curation, examples,
+benchmarks) gets sharding for free; see :mod:`repro.shard.index` for the
+architecture (router / inner engines / boundary bridge).
+"""
+
+from ..api.config import ClusterConfig
+from ..api.registry import register_backend
+from .bridge import BoundaryBridge  # noqa: F401
+from .index import ShardedIndex  # noqa: F401
+from .rebalance import propose_rebalance, shard_loads  # noqa: F401
+from .router import SLOTS, RebalancePlan, ShardRouter  # noqa: F401
+
+
+@register_backend("sharded")
+def _build_sharded(cfg: ClusterConfig) -> ShardedIndex:
+    return ShardedIndex(cfg)

@@ -1,0 +1,225 @@
+"""Boundary bridge: cross-shard cluster merging over the collision graph.
+
+A shard's inner index only sees its own points, so two global facts are
+invisible to it:
+
+  * **support** — Definition 4 is global: a bucket with ``k`` members
+    split across shards makes all of them core, while every local bucket
+    stays sub-threshold;
+  * **connectivity** — core points sharing a bucket are one cluster even
+    when they live on different shards (and border points may have their
+    only colliding core on a remote shard).
+
+Following the merge step of theoretically-efficient parallel DBSCAN
+(Wang, Gu & Shun), the bridge keeps a directory of the *global* buckets —
+membership, per-shard occupancy and exact support counts (the same
+threshold-crossing bookkeeping DynamicDBSCAN does, minus the forest) —
+and produces the global partition as a small union pass:
+
+  1. union each shard-local component (always a *refinement* of the
+     global partition: a local core is a global core, and every local
+     edge is a global collision edge);
+  2. chain the global cores of every bucket that local chains could have
+     missed (cross-shard buckets, or buckets containing a core whose
+     support is remote);
+  3. attach locally-noise non-core points to a colliding global core.
+
+Steps 2–3 touch only boundary structure; intra-shard connectivity rides
+on the inner Euler-tour forests for free.
+
+Equivalence caveat (shared with the repo's cross-backend equivalence in
+general): which cluster a *border* point joins is a tie-break.  When a
+non-core point collides with cores of two different clusters, the
+single-shard engine keeps whichever anchor its update history produced,
+while the merge keeps the shard-local anchor (or scans tables in order
+for a remote one) — the core partition and the noise set always match,
+but such a border point can land in the other colliding cluster.  The
+paper's well-separated workloads never exercise the tie.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core.dynamic_dbscan import NOISE
+
+BucketKey = Tuple[int, bytes]  # (table, key bytes)
+
+
+class BoundaryBridge:
+    def __init__(self, t: int, k: int, attach_orphans: bool = True):
+        self.t, self.k = int(t), int(k)
+        self.attach_orphans = attach_orphans
+        self.members: Dict[BucketKey, Set[int]] = {}
+        self.shard_count: Dict[BucketKey, Dict[int, int]] = {}
+        self.keys: Dict[int, List[bytes]] = {}
+        self.support: Dict[int, int] = {}  # #buckets of size >= k (global)
+        self.n_boundary_buckets = 0  # buckets whose members span >1 shard
+        self.n_merge_passes = 0
+        self.n_bridge_unions = 0
+
+    # ------------------------------------------------------------------ #
+    # directory maintenance (mirrors DynamicDBSCAN's support bookkeeping)
+    # ------------------------------------------------------------------ #
+    def insert(self, idx: int, keys: List[bytes], shard: int) -> None:
+        self.keys[idx] = keys
+        self.support[idx] = 0
+        for i, key in enumerate(keys):
+            b = (i, key)
+            mem = self.members.setdefault(b, set())
+            mem.add(idx)
+            sc = self.shard_count.setdefault(b, {})
+            sc[shard] = sc.get(shard, 0) + 1
+            if sc[shard] == 1 and len(sc) == 2:
+                self.n_boundary_buckets += 1
+            sz = len(mem)
+            if sz == self.k:
+                for y in mem:
+                    self.support[y] += 1
+            elif sz > self.k:
+                self.support[idx] += 1
+
+    def delete(self, idx: int, shard: int) -> None:
+        for i, key in enumerate(self.keys[idx]):
+            b = (i, key)
+            mem = self.members[b]
+            mem.discard(idx)
+            sc = self.shard_count[b]
+            sc[shard] -= 1
+            if sc[shard] == 0:
+                del sc[shard]
+                if len(sc) == 1:
+                    self.n_boundary_buckets -= 1
+            if len(mem) == self.k - 1:
+                for y in mem:
+                    self.support[y] -= 1
+            if not mem:
+                del self.members[b]
+                del self.shard_count[b]
+        del self.keys[idx]
+        del self.support[idx]
+
+    def move(self, idx: int, src: int, dst: int) -> None:
+        """Re-home ``idx`` (rebalance): membership and support are
+        placement-invariant; only the per-shard occupancy changes."""
+        if src == dst:
+            return
+        for i, key in enumerate(self.keys[idx]):
+            sc = self.shard_count[(i, key)]
+            sc[src] -= 1
+            before = len(sc)
+            if sc[src] == 0:
+                del sc[src]
+            sc[dst] = sc.get(dst, 0) + 1
+            after = len(sc)
+            if before > 1 and after == 1:
+                self.n_boundary_buckets -= 1
+            elif before == 1 and after > 1:
+                self.n_boundary_buckets += 1
+
+    def is_core(self, idx: int) -> bool:
+        return self.support[idx] > 0
+
+    # ------------------------------------------------------------------ #
+    # the merge pass
+    # ------------------------------------------------------------------ #
+    def merge(self, shard_labels: Iterable[Dict[int, int]]) -> Dict[int, int]:
+        """Global canonical labelling from the per-shard labellings.
+
+        Components are numbered by first occurrence in ascending-id order;
+        noise (global non-core with no colliding global core) -> NOISE.
+        """
+        self.n_merge_passes += 1
+        parent: Dict[int, int] = {i: i for i in self.support}
+
+        def find(a: int) -> int:
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        def union(a: int, b: int) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[max(ra, rb)] = min(ra, rb)
+
+        # 1. shard-local components (intra-shard forests do the bulk work)
+        clustered: Set[int] = set()
+        for lab in shard_labels:
+            rep: Dict[int, int] = {}
+            for i, l in lab.items():
+                if l == NOISE:
+                    continue
+                clustered.add(i)
+                if l in rep:
+                    union(rep[l], i)
+                else:
+                    rep[l] = i
+
+        # 2. cross-shard core chains: any bucket the local chains could
+        #    not fully cover (spans shards, or holds a core whose support
+        #    is remote) gets its global cores chained here.
+        for b, mem in self.members.items():
+            if len(mem) < 2:
+                continue
+            cores = sorted(m for m in mem if self.support[m] > 0)
+            if len(cores) >= 2:
+                before = {find(c) for c in cores}
+                if len(before) > 1:
+                    self.n_bridge_unions += len(before) - 1
+                    for u, v in zip(cores, cores[1:]):
+                        union(u, v)
+
+        # 3. border points whose only colliding core is remote (or was
+        #    locally sub-threshold): attach to the first global core found
+        #    in table order, matching LinkNonCorePoint's scan order.
+        #    Gated on attach_orphans — with re-attachment disabled the
+        #    engines leave such points noise, and so do we.
+        if self.attach_orphans:
+            for i, sup in self.support.items():
+                if sup > 0 or i in clustered:
+                    continue
+                for ti, key in enumerate(self.keys[i]):
+                    cores = [m for m in self.members[(ti, key)]
+                             if m != i and self.support[m] > 0]
+                    if cores:
+                        union(i, min(cores))
+                        clustered.add(i)
+                        break
+
+        # canonicalise: number components by first occurrence, sorted ids
+        out: Dict[int, int] = {}
+        number: Dict[int, int] = {}
+        for i in sorted(self.support):
+            if self.support[i] == 0 and i not in clustered:
+                out[i] = NOISE
+            else:
+                r = find(i)
+                out[i] = number.setdefault(r, len(number))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # diagnostics
+    # ------------------------------------------------------------------ #
+    def check(self, home: Dict[int, int]) -> None:
+        """Directory self-check against the home map (used by tests)."""
+        assert set(self.keys) == set(home), "directory/home id mismatch"
+        # support counts are exact w.r.t. global bucket sizes
+        for idx, keys in self.keys.items():
+            s = sum(1 for i, key in enumerate(keys)
+                    if len(self.members[(i, key)]) >= self.k)
+            assert s == self.support[idx], (idx, s, self.support[idx])
+        # per-shard occupancy matches the home map; boundary count exact
+        n_boundary = 0
+        for b, mem in self.members.items():
+            assert mem, b
+            sc: Dict[int, int] = {}
+            for m in mem:
+                sc[home[m]] = sc.get(home[m], 0) + 1
+            assert sc == self.shard_count[b], (b, sc, self.shard_count[b])
+            if len(sc) > 1:
+                n_boundary += 1
+        assert n_boundary == self.n_boundary_buckets, (
+            n_boundary, self.n_boundary_buckets)

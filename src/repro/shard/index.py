@@ -1,0 +1,300 @@
+"""``ShardedIndex`` — a ClusterIndex of ClusterIndexes.
+
+Points are routed by :class:`ShardRouter` (hash of the table-0 grid code
+into contiguous key ranges) to one of ``cfg.shards`` inner indices, each
+any registered grid-bucket backend (``cfg.inner_backend``: ``dynamic``,
+``batched``, ``batched-device``, ``emz-static``).  Mutations fan out
+per-shard — ``insert_batch`` splits a run into per-shard sub-batches, so
+device backends keep their one-kernel-per-run hashing — and the
+:class:`BoundaryBridge` reconciles cross-shard structure so ``labels()``
+is the same global partition the single-shard inner backend computes
+(same cores and noise set; border-point ties — see bridge.py — may
+resolve to a different colliding cluster).
+
+``snapshot()`` nests the per-shard snapshots (flattened under
+``shard<i>/`` keys, so it round-trips through
+``CheckpointManager.save_index`` unchanged), and :meth:`rebalance`
+live-migrates a key range between shards by replaying the affected rows
+of the source shard's snapshot into the target — snapshot-based live
+migration in miniature.
+
+Not supported as inner backends: ``naive`` (its ε-ball components are not
+collision-graph components, so shard-local merges would over-connect) and
+``emz-fixed`` (insert-only).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..api.config import ClusterConfig
+from ..api.index import ClusterIndex
+from ..api.registry import build_index
+from ..core.dynamic_dbscan import check_unique_ids
+from ..core.hashing import GridLSH
+from .bridge import BoundaryBridge
+from .router import RebalancePlan, ShardRouter
+
+# inner engines whose local partitions are collision-graph refinements
+MIXED_KEY_BACKENDS = ("batched", "batched-device")
+UNSUPPORTED_INNER = ("naive", "emz-fixed", "sharded")
+
+PlanLike = Union[RebalancePlan, Tuple[int, int, int]]
+
+
+class ShardedIndex(ClusterIndex):
+    def __init__(self, cfg: ClusterConfig):
+        super().__init__(cfg)
+        if cfg.inner_backend in UNSUPPORTED_INNER:
+            raise ValueError(
+                f"inner_backend {cfg.inner_backend!r} cannot be sharded: "
+                "cross-shard merging needs a grid-bucket engine with "
+                "deletions (dynamic, batched, batched-device, emz-static)"
+            )
+        self._inner_cfg = cfg.replace(backend=cfg.inner_backend)
+        self.inners: List[ClusterIndex] = [
+            build_index(self._inner_cfg) for _ in range(cfg.shards)
+        ]
+        # one LSH family shared by router + bridge; identical to the inner
+        # engines' (seeded from the same config), so directory keys match
+        # inner bucket keys bit-for-bit
+        self.lsh = GridLSH(cfg.d, cfg.eps, cfg.t, seed=cfg.seed)
+        self._mixed_keys = cfg.inner_backend in MIXED_KEY_BACKENDS
+        self.router = ShardRouter(self.lsh, cfg.shards, seed=cfg.seed)
+        self.bridge = BoundaryBridge(cfg.t, cfg.k,
+                                     attach_orphans=cfg.attach_orphans)
+        self._home: Dict[int, int] = {}  # idx -> shard
+        self._next_idx = 0
+        self._cache: Optional[Dict[int, int]] = None
+
+    # ------------------------------------------------------------------ #
+    # hashing (one vectorised pass per run, mirroring the inner key space)
+    # ------------------------------------------------------------------ #
+    def _route_and_key(self, X: np.ndarray) -> Tuple[np.ndarray, List[List[bytes]]]:
+        """(n, d) -> ((n,) target shards, per-point bucket keys).
+
+        The exact-key path shares one ``codes_batch`` pass between the
+        router (table-0 slice) and the bridge directory; the mixed-key
+        path needs its own float32 hash to match the inner engines'
+        buckets bit-for-bit, so it pays one extra pass.
+        """
+        t = self.cfg.t
+        if self._mixed_keys:
+            c0 = self.lsh.codes_batch(X)[:, 0, :]
+            mixed = self.lsh.device_keys_batch(X)  # (n, t, 2) int32
+            keys = [[mixed[j, i].tobytes() for i in range(t)]
+                    for j in range(X.shape[0])]
+        else:
+            codes = self.lsh.codes_batch(X)  # (n, t, d) int64
+            c0 = codes[:, 0, :]
+            keys = [[codes[j, i].tobytes() for i in range(t)]
+                    for j in range(X.shape[0])]
+        shards = self.router.assignment[self.router.slots_from_codes(c0)]
+        return shards, keys
+
+    def _keys_batch(self, X: np.ndarray) -> List[List[bytes]]:
+        return self._route_and_key(X)[1]
+
+    # ------------------------------------------------------------------ #
+    # mutations
+    # ------------------------------------------------------------------ #
+    def insert(self, x: np.ndarray, idx: Optional[int] = None) -> int:
+        return self.insert_batch(
+            np.asarray(x, dtype=np.float64)[None], ids=[idx]
+        )[0]
+
+    def insert_batch(self, X: np.ndarray,
+                     ids: Optional[Sequence[Optional[int]]] = None) -> List[int]:
+        X = np.asarray(X, dtype=np.float64)
+        if X.ndim != 2 or X.shape[1] != self.cfg.d:
+            raise ValueError(f"batch shape {X.shape} != (n, {self.cfg.d})")
+        if ids is not None and len(ids) != X.shape[0]:
+            raise ValueError("ids length must match batch size")
+        n = X.shape[0]
+        # resolve handles with claim_index semantics (same messages, same
+        # auto-id sequence) without copying the live-id set per call
+        fresh: set = set()
+        out: List[int] = []
+        nxt = self._next_idx
+        for j in range(n):
+            idx = None if ids is None else ids[j]
+            if idx is None:
+                idx = nxt
+            elif idx in self._home or idx in fresh:
+                raise KeyError(f"index {idx} already present")
+            nxt = max(nxt, idx + 1)
+            fresh.add(idx)
+            out.append(idx)
+        self._next_idx = nxt
+        if n == 0:
+            return out
+        shards, keys = self._route_and_key(X)
+        # fan out per shard, preserving in-shard stream order so batched
+        # inners hash each sub-run in one kernel call
+        for s in range(self.cfg.shards):
+            rows = np.flatnonzero(shards == s)
+            if rows.size:
+                self.inners[s].insert_batch(
+                    X[rows], ids=[out[j] for j in rows]
+                )
+        for j in range(n):
+            s = int(shards[j])
+            self._home[out[j]] = s
+            self.bridge.insert(out[j], keys[j], s)
+        self._cache = None
+        return out
+
+    def delete(self, idx: int) -> None:
+        if idx not in self._home:
+            raise KeyError(idx)
+        s = self._home.pop(idx)
+        self.inners[s].delete(idx)
+        self.bridge.delete(idx, s)
+        self._cache = None
+
+    def delete_batch(self, ids: Sequence[int]) -> None:
+        check_unique_ids(ids)
+        for i in ids:
+            if i not in self._home:
+                raise KeyError(i)
+        by_shard: Dict[int, List[int]] = {}
+        for i in ids:
+            by_shard.setdefault(self._home[i], []).append(i)
+        for s, group in by_shard.items():
+            self.inners[s].delete_batch(group)
+            for i in group:
+                self.bridge.delete(i, s)
+                del self._home[i]
+        self._cache = None
+
+    # ------------------------------------------------------------------ #
+    # queries (global partition = inner partitions + bridge merge)
+    # ------------------------------------------------------------------ #
+    def _all_labels(self) -> Dict[int, int]:
+        if self._cache is None:
+            self._cache = self.bridge.merge(
+                inner.labels() for inner in self.inners
+            )
+        return self._cache
+
+    def label(self, idx: int) -> int:
+        if idx not in self._home:
+            raise KeyError(idx)
+        return self._all_labels()[idx]
+
+    def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
+        all_lab = self._all_labels()
+        if ids is None:
+            return dict(all_lab)
+        return {i: all_lab[i] for i in ids}
+
+    def is_core(self, idx: int) -> bool:
+        return self.bridge.is_core(idx)
+
+    def ids(self) -> List[int]:
+        return sorted(self._home)
+
+    def __contains__(self, idx: int) -> bool:
+        return idx in self._home
+
+    def __len__(self) -> int:
+        return len(self._home)
+
+    # ------------------------------------------------------------------ #
+    # rebalancing: key-range live migration via snapshot replay
+    # ------------------------------------------------------------------ #
+    def _shard_rows(self, s: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids, points) of shard ``s`` from its snapshot — every built-in
+        backend's state exposes fixed-dtype ``ids``/``points`` arrays."""
+        state = self.inners[s].snapshot()["state"]
+        return (np.asarray(state["ids"], dtype=np.int64),
+                np.asarray(state["points"], dtype=np.float64))
+
+    def rebalance(self, plan: Union[PlanLike, Sequence[PlanLike]]) -> Dict[str, int]:
+        """Move the key ranges in ``plan`` to their target shards,
+        migrating the affected live points (snapshot out of the source,
+        replay into the target, same handles).  The global partition is
+        unchanged — placement never affects the bridge's directory."""
+        if isinstance(plan, (RebalancePlan, tuple)):
+            plan = [plan]
+        plans = [p if isinstance(p, RebalancePlan) else RebalancePlan(*p)
+                 for p in plan]
+        moved = 0
+        for p in plans:
+            self.router.move_range(p)
+            for s in range(self.cfg.shards):
+                if s == p.target:
+                    continue
+                ids_s, X_s = self._shard_rows(s)
+                if ids_s.size == 0:
+                    continue
+                slots = self.router.slots_batch(X_s)
+                take = (slots >= p.start) & (slots < p.stop)
+                if not take.any():
+                    continue
+                movers = [int(i) for i in ids_s[take]]
+                self.inners[s].delete_batch(movers)
+                self.inners[p.target].insert_batch(X_s[take], ids=movers)
+                for i in movers:
+                    self.bridge.move(i, s, p.target)
+                    self._home[i] = p.target
+                moved += len(movers)
+        self._cache = None
+        return {"moved": moved, "plans": len(plans)}
+
+    # ------------------------------------------------------------------ #
+    # persistence: nested per-shard snapshots, flat npz-safe keys
+    # ------------------------------------------------------------------ #
+    def _state(self) -> Dict[str, np.ndarray]:
+        state: Dict[str, np.ndarray] = {
+            "router": self.router.state(),
+            "next_idx": np.asarray(self._next_idx, dtype=np.int64),
+        }
+        for s, inner in enumerate(self.inners):
+            for key, arr in inner.snapshot()["state"].items():
+                state[f"shard{s:03d}/{key}"] = arr
+        return state
+
+    def _load_state(self, state: Dict[str, np.ndarray]) -> None:
+        self.router.load_state(state["router"])
+        self._next_idx = int(state["next_idx"])
+        for s, inner in enumerate(self.inners):
+            prefix = f"shard{s:03d}/"
+            sub = {key[len(prefix):]: arr for key, arr in state.items()
+                   if key.startswith(prefix)}
+            inner.restore({"config": self._inner_cfg.to_dict(), "state": sub})
+            ids_s, X_s = self._shard_rows(s)
+            if ids_s.size:
+                keys = self._keys_batch(X_s)
+                for j, i in enumerate(ids_s):
+                    self._home[int(i)] = s
+                    self.bridge.insert(int(i), keys[j], s)
+        self._cache = None
+
+    # ------------------------------------------------------------------ #
+    # diagnostics
+    # ------------------------------------------------------------------ #
+    def check_invariants(self) -> None:
+        for s, inner in enumerate(self.inners):
+            inner.check_invariants()
+            for i in inner.ids():
+                assert self._home.get(i) == s, (i, s, self._home.get(i))
+        assert sum(len(inner) for inner in self.inners) == len(self._home)
+        self.bridge.check(self._home)
+
+    def stats(self) -> Dict[str, int]:
+        sizes = [len(inner) for inner in self.inners]
+        out: Dict[str, int] = {
+            "shards": self.cfg.shards,
+            "n_boundary_buckets": self.bridge.n_boundary_buckets,
+            "n_merge_passes": self.bridge.n_merge_passes,
+            "n_bridge_unions": self.bridge.n_bridge_unions,
+            "max_shard_points": max(sizes) if sizes else 0,
+            "min_shard_points": min(sizes) if sizes else 0,
+        }
+        for inner in self.inners:
+            for key, v in inner.stats().items():
+                out[key] = out.get(key, 0) + v
+        return out

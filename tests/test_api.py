@@ -59,8 +59,32 @@ def mixed_stream(n=400, d=4, seed=0, p_delete=0.25):
 # ---------------------------------------------------------------------- #
 def test_registry_exposes_required_backends():
     for required in ("dynamic", "batched", "batched-device", "emz-static",
-                     "naive"):
+                     "naive", "sharded"):
         assert required in ALL_BACKENDS
+
+
+def test_register_backend_overwrite_and_unregister():
+    from repro.api import register_backend, unregister_backend
+
+    @register_backend("swap-me")
+    def _a(cfg):
+        return build_index(cfg.replace(backend="dynamic"))
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("swap-me")(_a)
+
+    @register_backend("swap-me", overwrite=True)
+    def _b(cfg):
+        return build_index(cfg.replace(backend="batched"))
+
+    index = build_index(ClusterConfig(d=2, k=2, t=2, eps=0.5,
+                                      backend="swap-me"))
+    from repro.core.batched import BatchedDynamicDBSCAN
+    assert isinstance(index.engine, BatchedDynamicDBSCAN)
+    unregister_backend("swap-me")
+    assert "swap-me" not in available_backends()
+    with pytest.raises(KeyError, match="swap-me"):
+        unregister_backend("swap-me")
 
 
 def test_unknown_backend_raises_with_listing():
@@ -68,14 +92,20 @@ def test_unknown_backend_raises_with_listing():
         build_index(ClusterConfig(d=2, k=2, t=2, eps=0.5, backend="nope"))
 
 
-@pytest.mark.parametrize("bad", [
-    dict(d=0, k=2, t=2, eps=0.5),
-    dict(d=2, k=0, t=2, eps=0.5),
-    dict(d=2, k=2, t=2, eps=-1.0),
-    dict(d=2, k=2, t=2, eps=0.5, repair="sloppy"),
+@pytest.mark.parametrize("bad,named", [
+    (dict(d=0, k=2, t=2, eps=0.5), "d"),
+    (dict(d=2, k=0, t=2, eps=0.5), "k"),
+    (dict(d=2, k=2, t=0, eps=0.5), "t"),
+    (dict(d=2, k=2, t=2, eps=-1.0), "eps"),
+    (dict(d=2, k=2, t=2, eps=0.0), "eps"),
+    (dict(d=2, k=2, t=2, eps=0.5, repair="sloppy"), "repair"),
+    (dict(d=2, k=2, t=2, eps=0.5, shards=0), "shards"),
+    (dict(d=2, k=2, t=2, eps=0.5, inner_backend="sharded"), "inner_backend"),
 ])
-def test_config_validation(bad):
-    with pytest.raises(ValueError):
+def test_config_validation(bad, named):
+    """Bad parameters fail at construction, naming the parameter, instead
+    of failing deep inside GridLSH.__init__."""
+    with pytest.raises(ValueError, match=named):
         ClusterConfig(**bad)
 
 
@@ -111,6 +141,31 @@ def test_explicit_indices_and_duplicates(backend):
     assert index.insert_batch(X[1:4], ids=[None, 99, None]) == [18, 99, 100]
     with pytest.raises(KeyError):
         index.delete(12345)
+
+
+@pytest.mark.parametrize("backend", ("dynamic", "batched", "emz-static",
+                                     "sharded"))
+def test_delete_batch_rejects_duplicate_ids(backend):
+    X, _ = blobs(n=30, d=3, n_clusters=2, seed=4)
+    index = build_index(ClusterConfig(d=3, k=3, t=3, eps=0.5,
+                                      backend=backend))
+    ids = index.insert_batch(X)
+    with pytest.raises(KeyError, match=f"duplicate id {ids[7]}"):
+        index.delete_batch([ids[2], ids[7], ids[7]])
+    # nothing was deleted before the duplicate was detected
+    assert len(index) == 30
+    index.delete_batch(ids[:5])
+    assert len(index) == 25
+
+
+def test_engine_level_delete_batch_rejects_duplicates():
+    from repro.core.batched import BatchedDynamicDBSCAN
+
+    eng = BatchedDynamicDBSCAN(3, 3, 3, 0.5, seed=0)
+    ids = eng.add_batch(np.zeros((4, 3)) + np.arange(4)[:, None])
+    with pytest.raises(KeyError, match="duplicate id"):
+        eng.delete_batch([ids[0], ids[0]])
+    assert len(eng.points) == 4
 
 
 @pytest.mark.parametrize("backend", ("dynamic", "batched"))

@@ -1,0 +1,99 @@
+"""Crash recovery for CheckpointManager.save_index: the write protocol is
+temp dir -> atomic rename -> LATEST_INDEX pointer flip.  A crash at any
+point before the pointer flip must leave the previous snapshot as the
+restore point, and a later save must succeed despite the debris."""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import ClusterConfig, build_index
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import blobs
+
+
+def _make_index(seed=0, backend="batched"):
+    X, _ = blobs(n=150, d=4, n_clusters=3, cluster_std=0.15, seed=seed)
+    index = build_index(ClusterConfig(d=4, k=6, t=6, eps=0.5, seed=seed,
+                                      backend=backend))
+    index.insert_batch(X)
+    return index
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _crash_rename_on(monkeypatch, needle: str):
+    """Make Path.rename raise when the *target* involves ``needle`` —
+    simulates the process dying mid-save, temp dir left behind."""
+    real = pathlib.Path.rename
+
+    def rename(self, target):
+        if needle in str(target):
+            raise _Boom(f"simulated crash renaming to {target}")
+        return real(self, target)
+
+    monkeypatch.setattr(pathlib.Path, "rename", rename)
+
+
+@pytest.mark.parametrize("crash_at", ["index_00000002", "LATEST_INDEX"])
+def test_crashed_save_index_keeps_previous_snapshot(tmp_path, monkeypatch,
+                                                    crash_at):
+    index = _make_index()
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_index(1, index)
+    labels_before = index.labels()
+
+    # mutate, then crash while persisting step 2 (either before the final
+    # directory rename or before the pointer flip)
+    index.insert(np.zeros(4))
+    _crash_rename_on(monkeypatch, crash_at)
+    with pytest.raises(_Boom):
+        mgr.save_index(2, index)
+    monkeypatch.undo()
+
+    # crash debris is visible...
+    debris = (list(tmp_path.glob(".tmp_index_00000002_*"))
+              + list(tmp_path.glob("LATEST_INDEX.tmp")))
+    assert debris, "expected a leftover temp dir / tmp pointer"
+    # ...but LATEST_INDEX still names the intact step-1 snapshot
+    assert mgr.latest_index_step() == 1
+    restored = mgr.restore_index()
+    restored.check_invariants()
+    assert restored.labels() == labels_before
+
+    # recovery: the next save succeeds and becomes the restore point
+    mgr.save_index(3, index)
+    assert mgr.latest_index_step() == 3
+    assert mgr.restore_index().labels() == index.labels()
+
+
+def test_crash_before_first_save_means_no_checkpoint(tmp_path, monkeypatch):
+    index = _make_index()
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    _crash_rename_on(monkeypatch, "index_00000001")
+    with pytest.raises(_Boom):
+        mgr.save_index(1, index)
+    monkeypatch.undo()
+    assert mgr.latest_index_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_index()
+
+
+def test_crashed_save_applies_to_sharded_backend_too(tmp_path, monkeypatch):
+    index = build_index(ClusterConfig(d=4, k=6, t=6, eps=0.5, seed=1,
+                                      backend="sharded", shards=2,
+                                      inner_backend="batched"))
+    X, _ = blobs(n=120, d=4, n_clusters=3, cluster_std=0.15, seed=1)
+    index.insert_batch(X)
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_index(1, index)
+    _crash_rename_on(monkeypatch, "index_00000002")
+    with pytest.raises(_Boom):
+        mgr.save_index(2, index)
+    monkeypatch.undo()
+    restored = mgr.restore_index()
+    restored.check_invariants()
+    assert restored.labels() == index.labels()

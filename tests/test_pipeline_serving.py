@@ -95,12 +95,16 @@ def test_serving_engine_isolation_between_slots():
     assert alone == crowded
 
 
-def test_request_clustering_groups_similar():
+@pytest.mark.parametrize("cluster_shards", [1, 2])
+def test_request_clustering_groups_similar(cluster_shards):
     cfg = get_config("mamba2-780m").smoke()
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(2))
     eng = ServingEngine(model, params, batch=2, kv_len=16,
-                        cluster_requests=True, embed_dim=4)
+                        cluster_requests=True, embed_dim=4,
+                        cluster_shards=cluster_shards)
+    if cluster_shards > 1:
+        assert eng.clusterer.cfg.backend == "sharded"
     rng = np.random.default_rng(3)
     center = rng.normal(size=4)
     for rid in range(8):

@@ -1,0 +1,364 @@
+"""Tests for repro.shard: LSH key-range routing, the sharded ClusterIndex,
+cross-shard cluster merging, snapshot/rebalance, and the acceptance
+criterion — on mixed Insert/Delete streams a ShardedIndex (S ∈ {2, 4},
+inner ∈ {dynamic, batched}) yields the same canonical partition as the
+single-shard inner backend, including clusters spanning shard boundaries
+and after a snapshot()/restore() and a rebalance() mid-stream."""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ClusterConfig,
+    build_index,
+    register_backend,
+    restore_index,
+    unregister_backend,
+)
+from repro.core.hashing import GridLSH
+from repro.data import blobs
+from repro.shard import (
+    SLOTS,
+    RebalancePlan,
+    ShardedIndex,
+    ShardRouter,
+    propose_rebalance,
+    shard_loads,
+)
+
+from test_api import assert_same_partition, mixed_stream
+
+
+def sharded_cfg(shards, inner="dynamic", **kw):
+    base = dict(d=4, k=8, t=8, eps=0.45, seed=0, backend="sharded")
+    base.update(kw)
+    return ClusterConfig(shards=shards, inner_backend=inner, **base)
+
+
+# ---------------------------------------------------------------------- #
+# router
+# ---------------------------------------------------------------------- #
+def test_router_is_deterministic_and_covers_all_shards():
+    lsh = GridLSH(4, 0.45, 8, seed=0)
+    X, _ = blobs(n=2000, d=4, n_clusters=20, cluster_std=0.3, seed=0)
+    a = ShardRouter(lsh, 4, seed=0).shards_batch(X)
+    b = ShardRouter(lsh, 4, seed=0).shards_batch(X)
+    assert np.array_equal(a, b)  # same config -> same routing
+    assert set(np.unique(a)) == {0, 1, 2, 3}
+    # single-point routing agrees with the batch path
+    r = ShardRouter(lsh, 4, seed=0)
+    assert r.shard_of(X[17]) == a[17]
+    # a different seed gives a different slot hash
+    c = ShardRouter(lsh, 4, seed=1).shards_batch(X)
+    assert not np.array_equal(a, c)
+
+
+def test_router_ranges_partition_the_slot_space():
+    lsh = GridLSH(3, 0.5, 4, seed=0)
+    r = ShardRouter(lsh, 4, seed=0)
+    ranges = r.ranges()
+    assert ranges[0][0] == 0 and ranges[-1][1] == SLOTS
+    for (_, stop, _), (start, _, _) in zip(ranges, ranges[1:]):
+        assert stop == start
+    assert {s for _, _, s in ranges} == {0, 1, 2, 3}
+
+
+def test_router_move_range_and_validation():
+    lsh = GridLSH(3, 0.5, 4, seed=0)
+    r = ShardRouter(lsh, 2, seed=0)
+    r.move_range(RebalancePlan(0, 100, 1))
+    assert (r.assignment[:100] == 1).all()
+    with pytest.raises(ValueError, match="slot range"):
+        r.move_range(RebalancePlan(10, 5, 0))
+    with pytest.raises(ValueError, match="target shard"):
+        r.move_range(RebalancePlan(0, 10, 7))
+
+
+# ---------------------------------------------------------------------- #
+# config / registry plumbing
+# ---------------------------------------------------------------------- #
+def test_sharded_config_validation():
+    with pytest.raises(ValueError, match="shards"):
+        ClusterConfig(d=3, k=2, t=2, eps=0.5, shards=0)
+    with pytest.raises(ValueError, match="inner_backend"):
+        ClusterConfig(d=3, k=2, t=2, eps=0.5, inner_backend="sharded")
+
+
+@pytest.mark.parametrize("inner", ["naive", "emz-fixed"])
+def test_unsupported_inner_backends_rejected(inner):
+    with pytest.raises(ValueError, match="cannot be sharded"):
+        build_index(sharded_cfg(2, inner=inner))
+
+
+def test_custom_inner_backend_via_registry_swap():
+    """register_backend(overwrite=True)/unregister_backend let tests plug
+    a custom factory in as the sharded inner engine."""
+    calls = []
+
+    @register_backend("test-inner")
+    def _build(cfg):
+        calls.append(cfg.backend)
+        from repro.api.backends import _build_dynamic
+        return _build_dynamic(cfg)
+
+    try:
+        with pytest.raises(ValueError, match="overwrite"):
+            register_backend("test-inner")(_build)
+        register_backend("test-inner", overwrite=True)(_build)
+
+        X, _ = blobs(n=100, d=4, n_clusters=2, cluster_std=0.15, seed=0)
+        index = build_index(sharded_cfg(2, inner="test-inner"))
+        index.insert_batch(X)
+        assert len(calls) == 2  # one factory call per shard
+        assert len(index) == 100
+    finally:
+        unregister_backend("test-inner")
+    with pytest.raises(KeyError, match="test-inner"):
+        unregister_backend("test-inner")
+
+
+# ---------------------------------------------------------------------- #
+# mutation semantics match the single-shard contract
+# ---------------------------------------------------------------------- #
+def test_sharded_handle_assignment_matches_single_shard():
+    X, _ = blobs(n=20, d=4, n_clusters=2, seed=1)
+    index = build_index(sharded_cfg(3))
+    assert index.insert(X[0], idx=17) == 17
+    with pytest.raises(KeyError):
+        index.insert(X[1], idx=17)
+    assert index.insert_batch(X[1:4], ids=[None, 99, None]) == [18, 99, 100]
+    with pytest.raises(KeyError):
+        index.delete(12345)
+    with pytest.raises(ValueError, match="shape"):
+        index.insert(np.zeros(7))
+    with pytest.raises(ValueError, match="shape"):
+        index.insert_batch(np.zeros((3, 7)))
+
+
+def test_sharded_delete_batch_rejects_duplicates_before_mutating():
+    X, _ = blobs(n=30, d=4, n_clusters=2, seed=1)
+    index = build_index(sharded_cfg(2))
+    ids = index.insert_batch(X)
+    with pytest.raises(KeyError, match=f"duplicate id {ids[3]}"):
+        index.delete_batch([ids[0], ids[3], ids[5], ids[3]])
+    assert len(index) == 30  # nothing was removed
+    with pytest.raises(KeyError):
+        index.delete_batch([ids[0], 99999])
+    assert len(index) == 30
+    index.delete_batch(ids[:10])
+    assert len(index) == 20
+    index.check_invariants()
+
+
+# ---------------------------------------------------------------------- #
+# cross-shard equivalence (acceptance criterion)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("inner", ["dynamic", "batched", "emz-static"])
+@pytest.mark.parametrize("shards", [2, 4])
+def test_insert_stream_matches_single_shard(shards, inner):
+    X, _ = blobs(n=350, d=4, n_clusters=4, cluster_std=0.15, seed=0)
+    ref = build_index(sharded_cfg(shards).replace(backend=inner))
+    ref.insert_batch(X)
+    sh = build_index(sharded_cfg(shards, inner=inner))
+    sh.insert_batch(X)
+    sh.check_invariants()
+    assert_same_partition(ref.labels(), sh.labels())
+
+
+@pytest.mark.parametrize("inner", ["dynamic", "batched"])
+@pytest.mark.parametrize("shards", [2, 4])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mixed_stream_with_snapshot_and_rebalance_matches_single_shard(
+        seed, shards, inner):
+    """The PR's acceptance test: mixed Insert/Delete stream, snapshot/
+    restore + rebalance mid-stream, then compare the final partition
+    against the single-shard inner backend."""
+    events = mixed_stream(n=400, d=4, seed=seed)
+    ref = build_index(ClusterConfig(d=4, k=8, t=8, eps=0.45, seed=seed,
+                                    backend=inner))
+    ref.apply(events)
+
+    sh = build_index(sharded_cfg(shards, inner=inner, seed=seed))
+    half = len(events) // 2
+    sh.apply(events[:half])
+
+    # snapshot/restore round-trip mid-stream
+    sh = restore_index(sh.snapshot())
+    sh.check_invariants()
+
+    # rebalance mid-stream: the global partition must not move
+    before = sh.labels()
+    plan = propose_rebalance(sh)
+    if plan is not None:
+        moved = sh.rebalance(plan)["moved"]
+        assert moved > 0
+    sh.check_invariants()
+    assert_same_partition(before, sh.labels())
+
+    sh.apply(events[half:])
+    sh.check_invariants()
+    assert_same_partition(ref.labels(), sh.labels())
+
+
+def test_clusters_spanning_shard_boundaries_are_merged():
+    """Force every consecutive pair of a dense line of points onto
+    alternating shards-by-construction: the bridge must still report one
+    cluster, and the boundary directory must see cross-shard buckets."""
+    cfg = sharded_cfg(4, d=2, k=3, t=4, eps=0.5, seed=0)
+    index = build_index(cfg)
+    # a tight line of points spread over many grid cells -> many shards
+    X = np.stack([np.linspace(0, 30, 120), np.zeros(120)], axis=1)
+    X += 0.01 * np.random.default_rng(0).normal(size=X.shape)
+    index.insert_batch(X)
+    index.check_invariants()
+    assert len(set(shard_loads(index).tolist())) >= 1
+    assert shard_loads(index).min() > 0  # points really did spread out
+    lab = index.labels()
+    assert len({v for v in lab.values() if v != -1}) == 1  # one cluster
+    assert index.stats()["n_boundary_buckets"] > 0
+    assert index.stats()["n_bridge_unions"] > 0
+    # and it matches the unsharded reference exactly
+    ref = build_index(cfg.replace(backend="dynamic"))
+    ref.insert_batch(X)
+    assert_same_partition(ref.labels(), lab)
+
+
+def test_attach_orphans_false_is_respected():
+    """With re-attachment disabled the bridge must not quietly glue
+    orphaned non-core points back onto remote cores: the noise set has to
+    match the single-shard engine's."""
+    events = mixed_stream(n=300, d=4, seed=11, p_delete=0.35)
+    cfg = ClusterConfig(d=4, k=8, t=8, eps=0.45, seed=11,
+                        attach_orphans=False)
+    ref = build_index(cfg)
+    ref.apply(events)
+    sh = build_index(cfg.replace(backend="sharded", shards=3))
+    sh.apply(events)
+    assert sh.bridge.attach_orphans is False
+    ref_noise = {i for i, v in ref.labels().items() if v == -1}
+    sh_noise = {i for i, v in sh.labels().items() if v == -1}
+    assert ref_noise == sh_noise
+
+
+def test_config_with_shards_convention():
+    cfg = ClusterConfig(d=4, k=8, t=8, eps=0.45)
+    assert cfg.with_shards(0) is cfg
+    assert cfg.with_shards(1) is cfg
+    wrapped = cfg.replace(backend="batched").with_shards(4)
+    assert (wrapped.backend, wrapped.shards, wrapped.inner_backend) == \
+        ("sharded", 4, "batched")
+    # already sharded: only the count (and optionally the inner) changes
+    again = wrapped.with_shards(2)
+    assert (again.backend, again.shards, again.inner_backend) == \
+        ("sharded", 2, "batched")
+    assert wrapped.with_shards(0).shards == 1
+    assert cfg.with_shards(3, inner="emz-static").inner_backend == "emz-static"
+
+
+def test_label_and_is_core_agree_with_reference():
+    X, _ = blobs(n=250, d=4, n_clusters=3, cluster_std=0.15, seed=2)
+    ref = build_index(ClusterConfig(d=4, k=6, t=6, eps=0.45, seed=2))
+    sh = build_index(sharded_cfg(3, k=6, t=6, seed=2))
+    ref.insert_batch(X)
+    ids = sh.insert_batch(X)
+    for i in ids[::25]:
+        assert sh.is_core(i) == ref.is_core(i)
+        co = [j for j in ids if sh.label(j) == sh.label(i)]
+        co_ref = [j for j in ids if ref.label(j) == ref.label(i)]
+        assert co == co_ref
+    with pytest.raises(KeyError):
+        sh.label(10**9)
+
+
+# ---------------------------------------------------------------------- #
+# rebalance
+# ---------------------------------------------------------------------- #
+def test_rebalance_moves_a_key_range_and_preserves_everything():
+    X, _ = blobs(n=300, d=4, n_clusters=4, cluster_std=0.15, seed=3)
+    sh = build_index(sharded_cfg(2, inner="batched", seed=3))
+    ids = sh.insert_batch(X)
+    before_labels = sh.labels()
+    before_loads = shard_loads(sh).copy()
+    # move the whole first half of the slot space to shard 1
+    out = sh.rebalance(RebalancePlan(0, SLOTS // 2, 1))
+    sh.check_invariants()
+    assert out["moved"] > 0
+    loads = shard_loads(sh)
+    assert loads[1] == before_loads[1] + out["moved"]
+    assert loads[0] == before_loads[0] - out["moved"]
+    assert sh.labels() == before_labels  # identical, not just isomorphic
+    assert sh.ids() == sorted(ids)
+    # moving everything to shard 0 empties shard 1
+    sh.rebalance((0, SLOTS, 0))
+    assert shard_loads(sh).tolist() == [300, 0]
+    sh.check_invariants()
+    assert_same_partition(sh.labels(), before_labels)
+
+
+def test_propose_rebalance_narrows_the_load_gap():
+    X, _ = blobs(n=400, d=4, n_clusters=2, cluster_std=0.1, seed=4)
+    sh = build_index(sharded_cfg(4, seed=4))
+    sh.insert_batch(X)
+    for _ in range(8):
+        plan = propose_rebalance(sh)
+        if plan is None:
+            break
+        gap_before = int(shard_loads(sh).max() - shard_loads(sh).min())
+        sh.rebalance(plan)
+        gap_after = int(shard_loads(sh).max() - shard_loads(sh).min())
+        assert gap_after < gap_before
+    sh.check_invariants()
+
+
+# ---------------------------------------------------------------------- #
+# persistence
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("inner", ["dynamic", "batched", "emz-static"])
+def test_sharded_snapshot_roundtrip(inner):
+    events = mixed_stream(n=300, d=4, seed=5)
+    sh = build_index(sharded_cfg(3, inner=inner, seed=5))
+    sh.apply(events)
+    back = restore_index(sh.snapshot())
+    assert isinstance(back, ShardedIndex)
+    back.check_invariants()
+    assert back.labels() == sh.labels()
+    assert back.ids() == sh.ids()
+    assert shard_loads(back).tolist() == shard_loads(sh).tolist()
+    # restored index stays live and keeps routing consistently
+    new = back.insert(np.zeros(4))
+    assert new not in sh
+    back.delete(new)
+    assert back.labels() == sh.labels()
+
+
+def test_sharded_snapshot_preserves_rebalanced_assignment():
+    X, _ = blobs(n=200, d=4, n_clusters=3, cluster_std=0.15, seed=6)
+    sh = build_index(sharded_cfg(2, seed=6))
+    sh.insert_batch(X)
+    sh.rebalance(RebalancePlan(0, SLOTS // 4, 1))
+    back = restore_index(sh.snapshot())
+    assert np.array_equal(back.router.assignment, sh.router.assignment)
+    assert shard_loads(back).tolist() == shard_loads(sh).tolist()
+    back.check_invariants()
+
+
+def test_sharded_through_checkpoint_manager(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    events = mixed_stream(n=250, d=4, seed=7)
+    sh = build_index(sharded_cfg(2, inner="batched", seed=7))
+    sh.apply(events)
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save_index(1, sh)
+    back = mgr.restore_index()
+    back.check_invariants()
+    assert back.cfg == sh.cfg
+    assert back.labels() == sh.labels()
+
+
+def test_empty_sharded_index():
+    sh = build_index(sharded_cfg(4))
+    assert len(sh) == 0 and sh.ids() == [] and sh.labels() == {}
+    back = restore_index(sh.snapshot())
+    assert len(back) == 0
+    back.check_invariants()
