@@ -21,8 +21,10 @@ def main(argv=None) -> None:
                     help="tiny streams for CI: blobs-only table2, small n")
     ap.add_argument("--only", default=None,
                     choices=["table2", "figure2", "scaling", "shards",
-                             "kernels", "ablations", "paper_roofline",
-                             "roofline"])
+                             "serving", "kernels", "ablations",
+                             "paper_roofline", "roofline"])
+    ap.add_argument("--workers", type=int, default=0,
+                    help="thread-pool fan-out for the sharded backend")
     ap.add_argument("--backend", default="dynamic",
                     choices=available_backends(),
                     help="repro.api backend for the dynamic engine under test")
@@ -83,6 +85,24 @@ def main(argv=None) -> None:
             emit(f"shards/S{r['shards']}", r["us_per_update"],
                  f"updates_per_s={r['updates_per_s']:.0f};"
                  f"boundary={r['n_boundary_buckets']}")
+
+    if args.only == "serving" or (args.only is None and args.shards > 1):
+        print("\n===== Serving mix (interleaved updates + label() hot path) =====")
+        from .serving_mix import run as sm
+        inner = args.backend if args.backend != "sharded" else "batched"
+        rows = sm(shards=(1, args.shards or 2) if args.smoke else (1, 4, 8),
+                  workers=(0, args.workers) if args.workers else (0,),
+                  n=1200 if args.smoke else 16000,
+                  batch=100 if args.smoke else 500,
+                  rounds=3 if args.smoke else 4,
+                  queries=8 if args.smoke else 16,
+                  inner=inner)
+        for r in rows:
+            emit(f"serving_mix/S{r['shards']}_w{r['workers']}_"
+                 f"{'inc' if r['incremental'] else 'rebuild'}",
+                 r["label_after_update_p50_us"],
+                 f"steady_p50={r['label_steady_p50_us']:.1f}us;"
+                 f"updates_per_s={r['updates_per_s']:.0f}")
 
     if args.only in (None, "kernels"):
         print("\n===== Kernel / batched-update benches =====")

@@ -1,0 +1,163 @@
+"""Query-heavy serving mix: interleaved updates + ``label()`` hot path.
+
+The serving engine's workload is not "mutate a lot, then read once" — it
+is a sliding window where every admitted request *immediately* asks for
+its cluster (16-ish point queries per update batch).  PR 2's sharded
+backend paid an O(n) cross-shard merge on the first ``label()`` after
+any mutation; the incremental bridge turns that into
+"repair-dirty-set + find".  This benchmark measures exactly that:
+
+  * fill a window of ``n`` points, then run rounds of
+    (insert batch, Q queries, delete oldest batch, Q queries);
+  * the **first** ``label()`` after each mutation is recorded separately
+    (`after_update`) — that is the query that used to absorb the rebuild;
+  * sweeps shards × workers × incremental on/off, writes p50/p99 query
+    latency and update throughput to ``results/serving_mix.json``.
+
+  PYTHONPATH=src python -m benchmarks.serving_mix            # full sweep
+  PYTHONPATH=src python -m benchmarks.serving_mix --smoke --workers 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.api import ClusterConfig, build_index
+from repro.data import blobs
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+K, T, EPS = 10, 10, 0.75
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q)) if xs else 0.0
+
+
+def run_one(shards: int, workers: int, incremental: bool, *, n: int,
+            batch: int, rounds: int, queries: int, inner: str = "batched",
+            seed: int = 0) -> dict:
+    X, _ = blobs(n=n + batch * (rounds + 1), d=10, n_clusters=10, seed=seed)
+    cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed,
+                        workers=workers, incremental_merge=incremental)
+    cfg = (cfg.replace(backend=inner) if shards <= 1 else
+           cfg.replace(backend="sharded", shards=shards, inner_backend=inner))
+    index = build_index(cfg)
+    rng = np.random.default_rng(seed)
+
+    ids: list = []
+    row = 0
+    while row < n:
+        ids.extend(index.insert_batch(X[row:row + batch]))
+        row += batch
+
+    after_update_us: list = []   # first label() after a mutation batch
+    steady_us: list = []         # subsequent queries, structure clean
+    t_updates = 0.0
+    n_updates = 0
+
+    def probe():
+        targets = [ids[int(j)] for j in rng.integers(0, len(ids), size=queries)]
+        for qi, i in enumerate(targets):
+            t0 = time.perf_counter()
+            index.label(i)
+            dt = (time.perf_counter() - t0) * 1e6
+            (after_update_us if qi == 0 else steady_us).append(dt)
+
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        ids.extend(index.insert_batch(X[row:row + batch]))
+        t_updates += time.perf_counter() - t0
+        row += batch
+        n_updates += batch
+        probe()
+        t0 = time.perf_counter()
+        index.delete_batch(ids[:batch])
+        t_updates += time.perf_counter() - t0
+        ids = ids[batch:]
+        n_updates += batch
+        probe()
+
+    t0 = time.perf_counter()
+    n_clusters = len({v for v in index.labels().values() if v >= 0})
+    t_labels = time.perf_counter() - t0
+    stats = index.stats()
+    return {
+        "shards": shards,
+        "workers": workers,
+        "incremental": bool(incremental),
+        "inner": inner,
+        "live_points": len(index),
+        "updates_per_s": n_updates / t_updates,
+        "label_after_update_p50_us": _pct(after_update_us, 50),
+        "label_after_update_p99_us": _pct(after_update_us, 99),
+        "label_steady_p50_us": _pct(steady_us, 50),
+        "label_steady_p99_us": _pct(steady_us, 99),
+        "labels_full_ms": t_labels * 1e3,
+        "n_clusters": n_clusters,
+        "n_quotient_builds": stats.get("n_quotient_builds", 0),
+        "n_interesting_buckets": stats.get("n_interesting_buckets", 0),
+        "n_merge_passes": stats.get("n_merge_passes", 0),
+    }
+
+
+def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
+        rounds: int = 4, queries: int = 16, inner: str = "batched",
+        seed: int = 0) -> list:
+    """Full sweep: every shard count with the serial/threaded fan-out and
+    the incremental merge on/off (off only where it changes anything:
+    S > 1)."""
+    rows = []
+    for S in shards:
+        for W in (workers if S > 1 else (0,)):
+            for inc in ((True, False) if S > 1 else (True,)):
+                r = run_one(S, W, inc, n=n, batch=batch, rounds=rounds,
+                            queries=queries, inner=inner, seed=seed)
+                rows.append(r)
+                print(f"S={S} workers={W} incremental={str(inc):5s}  "
+                      f"label/after-update p50={r['label_after_update_p50_us']:10.1f}us "
+                      f"p99={r['label_after_update_p99_us']:10.1f}us  "
+                      f"steady p50={r['label_steady_p50_us']:7.1f}us  "
+                      f"{r['updates_per_s']:8.0f} updates/s")
+    for S in {s for s in shards if s > 1}:
+        inc = [r for r in rows if r["shards"] == S and r["incremental"]
+               and r["workers"] == 0]
+        reb = [r for r in rows if r["shards"] == S and not r["incremental"]
+               and r["workers"] == 0]
+        if inc and reb and inc[0]["label_after_update_p50_us"] > 0:
+            speed = (reb[0]["label_after_update_p50_us"]
+                     / inc[0]["label_after_update_p50_us"])
+            print(f"S={S}: incremental label() after update is {speed:.0f}x "
+                  "faster at p50 than the rebuild path")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "serving_mix.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (exercises the threaded "
+                         "fan-out end to end)")
+    ap.add_argument("--shards", type=int, nargs="+", default=None)
+    ap.add_argument("--workers", type=int, nargs="+", default=None)
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--inner", default="batched")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run(shards=tuple(args.shards or (1, 2)),
+            workers=tuple(args.workers or (0, 2)),
+            n=args.n or 1200, batch=100, rounds=3, queries=8,
+            inner=args.inner)
+    else:
+        run(shards=tuple(args.shards or (1, 4, 8)),
+            workers=tuple(args.workers or (0, 4)),
+            n=args.n or 16000, inner=args.inner)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,9 +36,14 @@ from .registry import register_backend
 class EulerTourIndex(ClusterIndex):
     """Adapter over the dynamic engines (shared DynamicDBSCAN machinery)."""
 
+    native_component_queries = True
+
     def __init__(self, cfg: ClusterConfig, engine: DynamicDBSCAN):
         super().__init__(cfg)
         self.engine = engine
+        # bind the native point query directly: the sharded quotient build
+        # calls it thousands of times per epoch, so adapter hops count
+        self.component_of = engine.get_cluster
 
     def insert(self, x, idx=None):
         return self.engine.add_point(x, idx=idx)
@@ -57,6 +62,12 @@ class EulerTourIndex(ClusterIndex):
 
     def labels(self, ids=None):
         return self.engine.labels(ids)
+
+    def core_anchor_of(self, idx):
+        return self.engine.core_anchor(idx)  # O(1) support/attach lookup
+
+    def drain_deltas(self):
+        return self.engine.drain_deltas()
 
     def is_core(self, idx: int) -> bool:
         return self.engine.is_core(idx)

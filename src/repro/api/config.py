@@ -24,6 +24,11 @@ class ClusterConfig:
     attach_orphans: bool = True  # DESIGN.md §3.2 border re-attachment
     shards: int = 1              # backend="sharded": number of key ranges
     inner_backend: str = "dynamic"  # backend="sharded": per-shard engine
+    workers: int = 0             # backend="sharded": thread pool size for
+    #                              per-shard fan-out (0/1 = serial)
+    incremental_merge: bool = True  # backend="sharded": maintain the
+    #                              cross-shard union-find under updates
+    #                              (False = rebuild per query, PR-2 path)
 
     def __post_init__(self):
         # Validate at construction with named messages instead of failing
@@ -40,6 +45,8 @@ class ClusterConfig:
             raise ValueError(f"unknown repair mode {self.repair!r}")
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.workers < 0:
+            raise ValueError(f"workers must be >= 0, got {self.workers}")
         if self.inner_backend == "sharded":
             raise ValueError("inner_backend cannot itself be 'sharded'")
 

@@ -21,7 +21,7 @@ Contract notes:
 from __future__ import annotations
 
 import abc
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,6 +32,12 @@ from .events import Delete, Insert
 
 class ClusterIndex(abc.ABC):
     NOISE = NOISE
+
+    #: True when the backend answers :meth:`component_of` /
+    #: :meth:`core_anchor_of` from maintained structure (no recompute) —
+    #: the capability the sharded incremental merge path requires of its
+    #: inner engines.
+    native_component_queries = False
 
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
@@ -72,27 +78,38 @@ class ClusterIndex(abc.ABC):
 
         Returns one entry per event: the assigned handle for an Insert,
         None for a Delete.  Maximal runs of consecutive Inserts are routed
-        through :meth:`insert_batch` so batched backends hash each run in
-        one kernel call without reordering the stream.
+        through :meth:`insert_batch` and maximal runs of consecutive
+        Deletes through :meth:`delete_batch`, so batched backends hash
+        each insert run in one kernel call and sharded backends fan both
+        kinds of run out per shard — without reordering the stream.  (A
+        duplicate id within one delete run therefore raises *before* any
+        of the run is applied, per the ``delete_batch`` contract.)
         """
         out: List[Optional[int]] = []
         run_x: List[np.ndarray] = []
         run_ids: List[Optional[int]] = []
+        run_del: List[int] = []
 
         def flush():
             if run_x:
                 out.extend(self.insert_batch(np.stack(run_x), ids=run_ids))
                 run_x.clear()
                 run_ids.clear()
+            if run_del:
+                self.delete_batch(run_del)
+                out.extend([None] * len(run_del))
+                run_del.clear()
 
         for ev in updates:
             if isinstance(ev, Insert):
+                if run_del:
+                    flush()
                 run_x.append(np.asarray(ev.x, dtype=np.float64))
                 run_ids.append(ev.idx)
             elif isinstance(ev, Delete):
-                flush()
-                self.delete(ev.idx)
-                out.append(None)
+                if run_x:
+                    flush()
+                run_del.append(ev.idx)
             else:
                 raise TypeError(f"not an Insert/Delete event: {ev!r}")
         flush()
@@ -109,6 +126,36 @@ class ClusterIndex(abc.ABC):
     def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
         """Canonical labelling of ``ids`` (default: all live points);
         noise maps to :data:`NOISE` (-1)."""
+
+    def component_of(self, idx: int) -> int:
+        """The point's native component handle — same opacity contract as
+        :meth:`label` (only comparable between two live points at one
+        instant), but guaranteed to be the backend's *cheapest* point
+        query (Euler-tour ROOT / union-find find for the maintained
+        engines).  Default: ``label(idx)``."""
+        return self.label(idx)
+
+    def core_anchor_of(self, idx: int) -> Optional[int]:
+        """The core point ``idx``'s membership rides on: itself if core,
+        its anchor core if an attached border point, None if noise.  Only
+        backends with ``native_component_queries`` answer this from
+        structure; others raise."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no native core-anchor query"
+        )
+
+    def drain_deltas(
+        self,
+    ) -> Optional[List[Tuple[int, Optional[int], Optional[int]]]]:
+        """Return and clear ``(idx, old, new)`` attachment deltas since the
+        previous drain, or None when the backend does not track changes.
+
+        A handle is the point itself (core), its anchor core (attached
+        border), or None (noise / not live); the first call activates
+        tracking and returns [].  Consumers re-query :meth:`label` for the
+        listed ids instead of interpreting the handles globally.
+        """
+        return None
 
     @abc.abstractmethod
     def ids(self) -> List[int]:

@@ -82,9 +82,13 @@ class BatchedDynamicDBSCAN(DynamicDBSCAN):
                 ids[j] if ids is not None else None,
             )
             out.append(self._add_with_keys(X[j], keys[j], idx))
+        # batch boundary: squash the change feed (drain_deltas) so a
+        # B-point run contributes O(touched ids), not O(B·t), entries
+        self._compact_journal()
         return out
 
     def delete_batch(self, ids: Sequence[int]) -> None:
         check_unique_ids(ids)
         for i in ids:
             self.delete_point(i)
+        self._compact_journal()

@@ -19,7 +19,7 @@ O(t²·k·(d + log n)) ⇒ O(d log³ n + log⁴ n) with t,k = Θ(log n).
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Set
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -130,6 +130,9 @@ class DynamicDBSCAN:
         self.attach: Dict[int, Optional[int]] = {}   # non-core -> anchor core
         self.anchored: Dict[int, Set[int]] = {}      # core -> anchored set
         self._next_idx = 0
+        # change feed: (idx, old, new) attachment deltas, None until a
+        # consumer activates it via drain_deltas() (see below)
+        self._journal: Optional[List[Tuple[int, Optional[int], Optional[int]]]] = None
         # instrumentation: how often the replacement-edge repair fires
         self.n_repair_scans = 0
         self.n_repair_links = 0
@@ -172,6 +175,8 @@ class DynamicDBSCAN:
         for c in sorted(promoted):  # idx order keeps chains coherent
             self._link_core_point(c)
         if self.support[idx] == 0:
+            # journal: _anchor records the attach; noise inserts are a
+            # no-op delta (None -> None) by the handle contract
             self._link_non_core_point(idx)
         return idx
 
@@ -179,6 +184,8 @@ class DynamicDBSCAN:
         """DeletePoint(x)."""
         if idx not in self.points:
             raise KeyError(idx)
+        if self._journal is not None:
+            self._record(idx, self._attach_handle(idx), None)
         if self.support[idx] > 0:
             self._unlink_core_point(idx)  # path repair + anchored re-link
         else:
@@ -202,6 +209,7 @@ class DynamicDBSCAN:
 
         for c in sorted(demoted):
             self._unlink_core_point(c)
+            self._record(c, c, None)  # demotion; _anchor records re-attach
             self._link_non_core_point(c)
 
         self.forest.remove_node(idx)
@@ -218,6 +226,57 @@ class DynamicDBSCAN:
 
     def core_set(self) -> Set[int]:
         return {i for i, s in self.support.items() if s > 0}
+
+    # component_of is the documented name of the native point query on the
+    # repro.api protocol; for this engine it is exactly GetCluster (ROOT).
+    component_of = get_cluster
+
+    def core_anchor(self, idx: int) -> Optional[int]:
+        """The core point ``idx``'s cluster membership rides on: itself if
+        core, its anchor if an attached border point, None if noise.
+        O(1) — the native query the sharded hot path resolves through."""
+        if self.support[idx] > 0:
+            return idx
+        return self.attach[idx]
+
+    # ------------------------------------------------------------------ #
+    # change feed: (idx, old, new) attachment deltas per update batch
+    # ------------------------------------------------------------------ #
+    def _record(self, idx: int, old: Optional[int], new: Optional[int]) -> None:
+        if self._journal is not None:
+            self._journal.append((idx, old, new))
+
+    def _attach_handle(self, idx: int) -> Optional[int]:
+        return idx if self.support[idx] > 0 else self.attach[idx]
+
+    def _compact_journal(self) -> None:
+        """Squash the pending feed to one (first-old, last-new) entry per
+        id, dropping no-ops — keeps the feed O(touched ids), not O(ops)."""
+        if not self._journal:
+            return
+        merged: Dict[int, List[Optional[int]]] = {}
+        for idx, old, new in self._journal:
+            if idx in merged:
+                merged[idx][1] = new
+            else:
+                merged[idx] = [old, new]
+        self._journal = [(i, o, n) for i, (o, n) in merged.items() if o != n]
+
+    def drain_deltas(self) -> List[Tuple[int, Optional[int], Optional[int]]]:
+        """Return and clear the attachment deltas since the last drain.
+
+        Entries are ``(idx, old, new)`` where a handle is the point itself
+        (core), its anchor core (attached border), or None (noise / not
+        present); consecutive changes to one id are compacted.  The first
+        call activates tracking (and returns []): the journal costs nothing
+        until someone consumes it.
+        """
+        if self._journal is None:
+            self._journal = []
+            return []
+        self._compact_journal()
+        out, self._journal = self._journal, []
+        return out
 
     # ------------------------------------------------------------------ #
     # bulk label extraction (for evaluation after each batch)
@@ -325,6 +384,8 @@ class DynamicDBSCAN:
     # ------------------------------------------------------------------ #
     def _link_core_point(self, c: int) -> None:
         """LinkCorePoint: splice c into every bucket's core chain."""
+        if self._journal is not None:
+            self._record(c, self.attach[c], c)  # promotion: c is now core
         # cut any edge incident to c (non-core c had at most its anchor)
         anchor = self.attach[c]
         if anchor is not None:
@@ -380,6 +441,7 @@ class DynamicDBSCAN:
             self.forest.cut(y, c)
             self.anchored[c].discard(y)
             self.attach[y] = None
+            self._record(y, c, None)  # detach; _anchor records a re-attach
             self._link_non_core_point(y)
             touched.append(y)
         self._repair_components(touched)
@@ -444,6 +506,7 @@ class DynamicDBSCAN:
         if self.forest.link(y, c):
             self.attach[y] = c
             self.anchored.setdefault(c, set()).add(y)
+            self._record(y, None, c)
 
     # ------------------------------------------------------------------ #
     # invariant checks (used by tests)

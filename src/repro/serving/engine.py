@@ -42,7 +42,8 @@ class ServingEngine:
                  eos_id: int = -1, cluster_requests: bool = False,
                  embed_dim: int = 8, mesh=None,
                  cluster_backend: str = "batched",
-                 cluster_shards: int = 1):
+                 cluster_shards: int = 1,
+                 cluster_workers: int = 0):
         self.model = model
         self.params = params
         self.B = batch
@@ -60,10 +61,14 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         # cluster_shards > 1 shards the request-clustering window by LSH
-        # key range (cluster_backend becomes the per-shard inner engine)
+        # key range (cluster_backend becomes the per-shard inner engine);
+        # cluster_workers > 1 fans the per-shard sub-batches out on a
+        # thread pool.  label() on the sharded backend is an incremental
+        # point query, so per-request labelling stays off the O(n) path.
         self.clusterer = (
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
-                                      backend=cluster_backend)
+                                      backend=cluster_backend,
+                                      workers=cluster_workers)
                         .with_shards(cluster_shards))
             if cluster_requests else None
         )
@@ -75,9 +80,22 @@ class ServingEngine:
         if self.clusterer is not None and req.embedding is not None:
             idx = self.clusterer.insert_batch(req.embedding[None])[0]
             req.cluster = self.clusterer.label(idx)
+            req._cidx = idx
             self._req_window.append(idx)
             if len(self._req_window) > 4 * self.B:
                 self.clusterer.delete(self._req_window.pop(0))
+            # change feed as a refresh trigger: attachment deltas
+            # under-report merges (a bridging core — or a cross-shard
+            # union — changes handles of points it never touched), so a
+            # non-empty feed re-labels the requests scheduling actually
+            # reads: the queue and the active slots.  label() is the
+            # incremental hot-path query, so this stays O(queue), not
+            # O(window).
+            if self.clusterer.drain_deltas() != []:
+                for r in (*self.queue, *filter(None, self.slots)):
+                    i = getattr(r, "_cidx", None)
+                    if i is not None and i in self.clusterer:
+                        r.cluster = self.clusterer.label(i)
         self.queue.append(req)
 
     def _schedule(self) -> None:

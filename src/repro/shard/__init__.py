@@ -4,11 +4,15 @@
 
     index = build_index(ClusterConfig(d=8, k=10, t=10, eps=0.5,
                                       backend="sharded", shards=4,
-                                      inner_backend="batched"))
+                                      inner_backend="batched",
+                                      workers=4))          # threaded fan-out
 
 Everything downstream of ``build_index`` (serving, curation, examples,
 benchmarks) gets sharding for free; see :mod:`repro.shard.index` for the
-architecture (router / inner engines / boundary bridge).
+architecture (router / inner engines / boundary bridge).  ``label()`` is
+an incremental point query (inner-find -> bridge-find over the maintained
+boundary-bucket set) unless ``incremental_merge=False`` restores the
+rebuild-per-query merge.
 """
 
 from ..api.config import ClusterConfig

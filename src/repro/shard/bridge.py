@@ -10,22 +10,41 @@ invisible to it:
     when they live on different shards (and border points may have their
     only colliding core on a remote shard).
 
-Following the merge step of theoretically-efficient parallel DBSCAN
-(Wang, Gu & Shun), the bridge keeps a directory of the *global* buckets —
-membership, per-shard occupancy and exact support counts (the same
-threshold-crossing bookkeeping DynamicDBSCAN does, minus the forest) —
-and produces the global partition as a small union pass:
+The bridge keeps a directory of the *global* buckets — membership,
+per-shard occupancy, exact global **and local** support counts (the same
+threshold-crossing bookkeeping DynamicDBSCAN does, minus the forest).
 
-  1. union each shard-local component (always a *refinement* of the
-     global partition: a local core is a global core, and every local
-     edge is a global collision edge);
-  2. chain the global cores of every bucket that local chains could have
-     missed (cross-shard buckets, or buckets containing a core whose
-     support is remote);
-  3. attach locally-noise non-core points to a colliding global core.
+The key structural fact (the cell-graph locality argument of de Berg et
+al., and the merge step of Wang–Gu–Shun's parallel DBSCAN): the inner
+engines already maintain exact intra-shard connectivity under updates —
+their Euler-tour forests chain the *locally core* members of every
+bucket.  The only buckets whose collision edges the local forests can
+miss are the **interesting** ones:
 
-Steps 2–3 touch only boundary structure; intra-shard connectivity rides
-on the inner Euler-tour forests for free.
+  * buckets whose members span more than one shard, or
+  * buckets holding a *boundary core* — a point that is globally core
+    (Definition 4 over the global bucket) but locally sub-threshold, so
+    its home shard never chained it.
+
+``incremental=True`` (default) maintains, under ``insert`` / ``delete``
+/ ``move``, exactly this boundary-bucket set plus per-bucket merge
+*representatives*: one locally-core core per (bucket, shard) — all
+locally-core cores of a bucket on one shard are already one inner
+component, so one stands in for all — and the bucket's boundary cores.
+Insertions and promotions extend these eagerly through the touched
+buckets and threshold crossings; deletions and demotions shrink or
+re-mark them (a dead cached representative is repaired lazily).  Every
+mutation stamps an epoch; the first query of an epoch builds a small
+quotient union-find by chaining each interesting bucket's
+representatives through their *current* inner component handles
+(inner-find = Euler-tour ROOT) — O(boundary), not O(n) — and
+``resolve()`` is then one inner find plus one quotient find.
+``labels()`` reuses the per-shard labellings and chains only the
+interesting buckets.
+
+``incremental=False`` restores the PR-2 path: :meth:`merge` rebuilds a
+throwaway union-find over *all* live points and scans the whole
+directory on every call (kept as the oracle and fallback).
 
 Equivalence caveat (shared with the repo's cross-backend equivalence in
 general): which cluster a *border* point joins is a tie-break.  When a
@@ -39,19 +58,38 @@ paper's well-separated workloads never exercise the tie.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Set, Tuple
-
-import numpy as np
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core.dynamic_dbscan import NOISE
 
 BucketKey = Tuple[int, bytes]  # (table, key bytes)
 
+# merge-representative classes of a live point w.r.t. one of its buckets
+_NONCORE, _LOCAL_CORE, _BOUNDARY_CORE = 0, 1, 2
+
+
+class _Reps:
+    """Merge representatives of one bucket: per-shard locally-core count
+    and cached representative (None = stale, repaired lazily), plus the
+    bucket's boundary cores."""
+
+    __slots__ = ("lc_count", "lc_rep", "bc")
+
+    def __init__(self):
+        self.lc_count: Dict[int, int] = {}
+        self.lc_rep: Dict[int, Optional[int]] = {}
+        self.bc: Set[int] = set()
+
+    def units(self) -> int:
+        return len(self.lc_count) + len(self.bc)
+
 
 class BoundaryBridge:
-    def __init__(self, t: int, k: int, attach_orphans: bool = True):
+    def __init__(self, t: int, k: int, attach_orphans: bool = True,
+                 incremental: bool = True):
         self.t, self.k = int(t), int(k)
         self.attach_orphans = attach_orphans
+        self.incremental = bool(incremental)
         self.members: Dict[BucketKey, Set[int]] = {}
         self.shard_count: Dict[BucketKey, Dict[int, int]] = {}
         self.keys: Dict[int, List[bytes]] = {}
@@ -59,13 +97,116 @@ class BoundaryBridge:
         self.n_boundary_buckets = 0  # buckets whose members span >1 shard
         self.n_merge_passes = 0
         self.n_bridge_unions = 0
+        # --- incremental boundary structure (see module docstring) ---
+        self.home: Dict[int, int] = {}           # idx -> shard
+        self.local_support: Dict[int, int] = {}  # #buckets locally >= k
+        self.n_cores: Dict[BucketKey, int] = {}  # global cores per bucket
+        self._rep: Dict[BucketKey, int] = {}     # cached live core per bucket
+        self._reps: Dict[BucketKey, _Reps] = {}  # merge representatives
+        self.interesting: Set[BucketKey] = set()
+        self.epoch = 0  # bumped per mutation; quotient is epoch-stamped
+        self._q_parent: Dict[int, int] = {}
+        self._q_epoch = -1
+        self.n_quotient_builds = 0
+        self.n_boundary_merges = 0
+        self.n_rep_repairs = 0
 
     # ------------------------------------------------------------------ #
     # directory maintenance (mirrors DynamicDBSCAN's support bookkeeping)
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _cls(sup: int, loc: int) -> int:
+        if sup <= 0:
+            return _NONCORE
+        return _BOUNDARY_CORE if loc == 0 else _LOCAL_CORE
+
+    def _refresh_interesting(self, b: BucketKey) -> None:
+        ent = self._reps.get(b)
+        if b in self.members and (len(self.shard_count[b]) > 1
+                                  or (ent is not None and ent.bc)):
+            self.interesting.add(b)
+        else:
+            self.interesting.discard(b)
+
+    def _rep_add(self, b: BucketKey, m: int, cls: int, shard: int) -> None:
+        if cls == _NONCORE:
+            return
+        ent = self._reps.get(b)
+        if ent is None:
+            ent = self._reps[b] = _Reps()
+        if cls == _BOUNDARY_CORE:
+            ent.bc.add(m)
+        else:
+            ent.lc_count[shard] = ent.lc_count.get(shard, 0) + 1
+            if ent.lc_rep.get(shard) is None:
+                ent.lc_rep[shard] = m
+
+    def _rep_remove(self, b: BucketKey, m: int, cls: int, shard: int) -> None:
+        if cls == _NONCORE:
+            return
+        ent = self._reps[b]
+        if cls == _BOUNDARY_CORE:
+            ent.bc.discard(m)
+        else:
+            n = ent.lc_count[shard] - 1
+            if n:
+                ent.lc_count[shard] = n
+                if ent.lc_rep.get(shard) == m:
+                    ent.lc_rep[shard] = None  # stale; repaired lazily
+            else:
+                del ent.lc_count[shard]
+                ent.lc_rep.pop(shard, None)
+        if not ent.lc_count and not ent.bc:
+            del self._reps[b]
+
+    def _lc_rep_of(self, b: BucketKey, shard: int) -> int:
+        """The (bucket, shard) locally-core representative, re-scanned
+        only when the cached one was removed."""
+        ent = self._reps[b]
+        m = ent.lc_rep.get(shard)
+        if m is None:
+            self.n_rep_repairs += 1
+            for y in self.members[b]:
+                if (self.home[y] == shard and self.support[y] > 0
+                        and self.local_support[y] > 0):
+                    m = y
+                    break
+            assert m is not None, (b, shard)
+            ent.lc_rep[shard] = m
+        return m
+
+    def _pre(self, pre: Dict[int, Tuple[int, int]], m: int) -> None:
+        if m not in pre:
+            pre[m] = (self.support[m], self.local_support[m])
+
+    def _apply_transitions(self, pre: Dict[int, Tuple[int, int]],
+                           skip: Optional[int] = None) -> None:
+        """Re-class every touched point and migrate it between the
+        per-bucket representative structures."""
+        for m, (sup0, loc0) in pre.items():
+            if m == skip:
+                continue
+            c0 = self._cls(sup0, loc0)
+            c1 = self._cls(self.support[m], self.local_support[m])
+            if c0 == c1:
+                continue
+            s = self.home[m]
+            for i, key in enumerate(self.keys[m]):
+                b = (i, key)
+                self._rep_remove(b, m, c0, s)
+                self._rep_add(b, m, c1, s)
+                self._refresh_interesting(b)
+
     def insert(self, idx: int, keys: List[bytes], shard: int) -> None:
+        if idx in self.keys:
+            raise KeyError(f"index {idx} already present in bridge directory")
+        inc = self.incremental
         self.keys[idx] = keys
         self.support[idx] = 0
+        self.home[idx] = shard
+        self.local_support[idx] = 0
+        promoted: Set[int] = set()
+        pre: Dict[int, Tuple[int, int]] = {}
         for i, key in enumerate(keys):
             b = (i, key)
             mem = self.members.setdefault(b, set())
@@ -77,11 +218,52 @@ class BoundaryBridge:
             sz = len(mem)
             if sz == self.k:
                 for y in mem:
+                    if inc:
+                        self._pre(pre, y)
                     self.support[y] += 1
+                    if self.support[y] == 1:
+                        promoted.add(y)
             elif sz > self.k:
+                if inc:
+                    self._pre(pre, idx)
                 self.support[idx] += 1
+            if not inc:
+                continue
+            # local threshold crossing: members homed on this shard gain
+            # local support (their home forest now chains this bucket)
+            if sc[shard] == self.k:
+                for y in mem:
+                    if self.home[y] == shard:
+                        self._pre(pre, y)
+                        self.local_support[y] += 1
+            elif sc[shard] > self.k:
+                self._pre(pre, idx)
+                self.local_support[idx] += 1
+            self._refresh_interesting(b)
+        if not inc:
+            return
+        if self.support[idx] > 0:  # core on arrival via sz > k buckets
+            promoted.add(idx)
+        for p in promoted:
+            for i, key in enumerate(self.keys[p]):
+                b = (i, key)
+                self.n_cores[b] = self.n_cores.get(b, 0) + 1
+                self._rep.setdefault(b, p)
+        # idx's own status was seeded as (0, 0); transition it like the rest
+        pre.setdefault(idx, (0, 0))
+        self._apply_transitions(pre)
+        self.epoch += 1
 
     def delete(self, idx: int, shard: int) -> None:
+        if idx not in self.keys:
+            raise KeyError(
+                f"cannot delete index {idx}: not in bridge directory")
+        inc = self.incremental
+        was_core = self.support[idx] > 0
+        cls_idx = (self._cls(self.support[idx], self.local_support[idx])
+                   if inc else _NONCORE)
+        demoted: List[int] = []
+        pre: Dict[int, Tuple[int, int]] = {}
         for i, key in enumerate(self.keys[idx]):
             b = (i, key)
             mem = self.members[b]
@@ -94,20 +276,64 @@ class BoundaryBridge:
                     self.n_boundary_buckets -= 1
             if len(mem) == self.k - 1:
                 for y in mem:
+                    if inc:
+                        self._pre(pre, y)
                     self.support[y] -= 1
+                    if self.support[y] == 0:
+                        demoted.append(y)
+            if inc:
+                self._rep_remove(b, idx, cls_idx, shard)
+                if was_core:
+                    self._drop_core_from(b)
+                # local threshold crossing on the vacated shard
+                if sc.get(shard, 0) == self.k - 1:
+                    for y in mem:
+                        if self.home[y] == shard:
+                            self._pre(pre, y)
+                            self.local_support[y] -= 1
             if not mem:
                 del self.members[b]
                 del self.shard_count[b]
+                self.n_cores.pop(b, None)
+                self._rep.pop(b, None)
+                self._reps.pop(b, None)
+            if inc:
+                self._refresh_interesting(b)
+        if inc:
+            for p in demoted:
+                for i, key in enumerate(self.keys[p]):
+                    self._drop_core_from((i, key))
         del self.keys[idx]
         del self.support[idx]
+        if inc:
+            del self.home[idx]
+            del self.local_support[idx]
+            self._apply_transitions(pre, skip=idx)
+            self.epoch += 1
 
     def move(self, idx: int, src: int, dst: int) -> None:
-        """Re-home ``idx`` (rebalance): membership and support are
-        placement-invariant; only the per-shard occupancy changes."""
+        """Re-home ``idx`` (rebalance): membership and global support are
+        placement-invariant; per-shard occupancy — and with it local
+        support and the boundary-bucket set — shifts between ``src`` and
+        ``dst``."""
+        if idx not in self.keys:
+            raise KeyError(f"cannot move index {idx}: not in bridge directory")
         if src == dst:
             return
+        inc = self.incremental
+        pre: Dict[int, Tuple[int, int]] = {}
+        if inc:
+            # take idx out of its buckets' representatives under its old
+            # class/home; the transition pass re-adds it under the new
+            cls_idx = self._cls(self.support[idx], self.local_support[idx])
+            for i, key in enumerate(self.keys[idx]):
+                self._rep_remove((i, key), idx, cls_idx, src)
+            pre[idx] = (0, 0)  # re-class from scratch after the move
+            self.home[idx] = dst
+            self.local_support[idx] = 0  # recomputed bucket by bucket
         for i, key in enumerate(self.keys[idx]):
-            sc = self.shard_count[(i, key)]
+            b = (i, key)
+            sc = self.shard_count[b]
             sc[src] -= 1
             before = len(sc)
             if sc[src] == 0:
@@ -118,20 +344,179 @@ class BoundaryBridge:
                 self.n_boundary_buckets -= 1
             elif before == 1 and after > 1:
                 self.n_boundary_buckets += 1
+            if not inc:
+                continue
+            # src shard lost a member: crossing k-1 demotes its residents
+            if sc.get(src, 0) == self.k - 1:
+                for y in self.members[b]:
+                    if y != idx and self.home[y] == src:
+                        self._pre(pre, y)
+                        self.local_support[y] -= 1
+            # dst shard gained one: crossing k promotes its residents
+            if sc[dst] == self.k:
+                for y in self.members[b]:
+                    if y != idx and self.home[y] == dst:
+                        self._pre(pre, y)
+                        self.local_support[y] += 1
+            if sc[dst] >= self.k:
+                self.local_support[idx] += 1
+            self._refresh_interesting(b)
+        if inc:
+            self._apply_transitions(pre)
+            self.epoch += 1
+
+    def _drop_core_from(self, b: BucketKey) -> None:
+        if b in self.n_cores:
+            n = self.n_cores[b] - 1
+            if n:
+                self.n_cores[b] = n
+            else:
+                del self.n_cores[b]
+                self._rep.pop(b, None)
+
+    def _bucket_core(self, b: BucketKey) -> Optional[int]:
+        """Some live global core of bucket ``b`` (cached; rescanned only
+        after core churn invalidates the cache)."""
+        mem = self.members.get(b)
+        if not mem or not self.n_cores.get(b, 0):
+            return None
+        rep = self._rep.get(b)
+        if rep is not None and rep in mem and self.support.get(rep, 0) > 0:
+            return rep
+        for m in mem:
+            if self.support.get(m, 0) > 0:
+                self._rep[b] = m
+                return m
+        return None
 
     def is_core(self, idx: int) -> bool:
         return self.support[idx] > 0
 
     # ------------------------------------------------------------------ #
-    # the merge pass
+    # incremental queries: inner-find -> bridge-find over the boundary
     # ------------------------------------------------------------------ #
-    def merge(self, shard_labels: Iterable[Dict[int, int]]) -> Dict[int, int]:
+    def _quotient(self, comp_of: Callable[[int], int]) -> Dict[int, int]:
+        """The epoch's quotient union-find over inner component handles:
+        chain every interesting bucket's merge representatives through
+        their current inner components.  A handle is whatever the inner
+        engine's native find returns (for the Euler-tour engines, the
+        forest's canonical node payload, built from globally-unique point
+        handles) — orderable and never colliding across shards, so the
+        handle alone keys the node.  The
+        representatives are maintained under the updates themselves, so
+        the build does no directory scans — its cost is one inner ROOT
+        per distinct representative (memoised across buckets)."""
+        if self._q_epoch == self.epoch:
+            return self._q_parent
+        parent: Dict[int, int] = {}
+        # Inner-ROOT memo.  Locally-core cores sharing one (shard,
+        # table-0 cell) are provably one inner component — the home
+        # forest chains every bucket it sees, and a table-0 bucket never
+        # spans shards — so their memo key is the cell, collapsing the
+        # root walks to one per distinct cell.  Boundary cores are not
+        # locally chained and memoise per point.
+        cell_memo: Dict[Tuple[int, bytes], int] = {}
+        bc_memo: Dict[int, int] = {}
+        keys = self.keys
+        home = self.home
+
+        def lc_node(m: int) -> int:
+            g = (home[m], keys[m][0])
+            v = cell_memo.get(g)
+            if v is None:
+                v = cell_memo[g] = comp_of(m)
+                parent.setdefault(v, v)
+            return v
+
+        def bc_node(m: int) -> int:
+            v = bc_memo.get(m)
+            if v is None:
+                v = bc_memo[m] = comp_of(m)
+                parent.setdefault(v, v)
+            return v
+
+        def find(a: int) -> int:
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        reps_map = self._reps
+        for b in self.interesting:
+            ent = reps_map.get(b)
+            if ent is None or ent.units() < 2:
+                continue  # at most one component: nothing to chain
+            n0: Optional[int] = None
+            lc_rep = ent.lc_rep
+            for shard, m in lc_rep.items():
+                if m is None:
+                    m = self._lc_rep_of(b, shard)
+                v = lc_node(m)
+                if n0 is None:
+                    n0 = v
+                    continue
+                ra, rb = find(n0), find(v)
+                if ra != rb:
+                    parent[max(ra, rb)] = min(ra, rb)
+            for m in ent.bc:
+                v = bc_node(m)
+                if n0 is None:
+                    n0 = v
+                    continue
+                ra, rb = find(n0), find(v)
+                if ra != rb:
+                    parent[max(ra, rb)] = min(ra, rb)
+        self._q_parent = parent
+        self._q_epoch = self.epoch
+        self.n_quotient_builds += 1
+        return parent
+
+    def _q_find(self, node: int) -> int:
+        parent = self._q_parent
+        if node not in parent:
+            return node  # component untouched by any interesting bucket
+        while parent[node] != node:
+            parent[node] = parent[parent[node]]
+            node = parent[node]
+        return node
+
+    def resolve(self, idx: int, comp_of: Callable[[int], int],
+                anchored: bool) -> Optional[int]:
+        """Global component handle of live ``idx`` (None = noise) — the
+        label() hot path.  ``comp_of`` is the inner engines' native find
+        (Euler-tour ROOT, by global handle); ``anchored`` says whether the
+        home shard holds a local anchor for a non-core ``idx``."""
+        self._quotient(comp_of)
+        if self.support[idx] > 0 or anchored:
+            return self._q_find(comp_of(idx))
+        if self.attach_orphans:
+            # border point whose only colliding core is remote (or was
+            # locally sub-threshold): first core bucket in table order,
+            # matching LinkNonCorePoint's scan order
+            for i, key in enumerate(self.keys[idx]):
+                c = self._bucket_core((i, key))
+                if c is not None:
+                    return self._q_find(comp_of(c))
+        return None
+
+    # ------------------------------------------------------------------ #
+    # the merge pass (full scan when incremental=False; labels() on the
+    # incremental path restricts step 2 to the interesting buckets)
+    # ------------------------------------------------------------------ #
+    def merge(self, shard_labels: Iterable[Dict[int, int]],
+              boundary_only: bool = False) -> Dict[int, int]:
         """Global canonical labelling from the per-shard labellings.
 
         Components are numbered by first occurrence in ascending-id order;
         noise (global non-core with no colliding global core) -> NOISE.
+        With ``boundary_only`` step 2 chains just the maintained
+        interesting-bucket set instead of scanning the whole directory —
+        exact, because the local chains already cover every other bucket.
         """
-        self.n_merge_passes += 1
+        if boundary_only:
+            self.n_boundary_merges += 1
+        else:
+            self.n_merge_passes += 1
         parent: Dict[int, int] = {i: i for i in self.support}
 
         def find(a: int) -> int:
@@ -161,7 +546,9 @@ class BoundaryBridge:
         # 2. cross-shard core chains: any bucket the local chains could
         #    not fully cover (spans shards, or holds a core whose support
         #    is remote) gets its global cores chained here.
-        for b, mem in self.members.items():
+        buckets = (self.interesting if boundary_only else self.members)
+        for b in buckets:
+            mem = self.members[b]
             if len(mem) < 2:
                 continue
             cores = sorted(m for m in mem if self.support[m] > 0)
@@ -223,3 +610,46 @@ class BoundaryBridge:
                 n_boundary += 1
         assert n_boundary == self.n_boundary_buckets, (
             n_boundary, self.n_boundary_buckets)
+        if self.incremental:
+            self._check_incremental(home)
+
+    def _check_incremental(self, home: Dict[int, int]) -> None:
+        """The maintained boundary structure is exact."""
+        assert self.home == home
+        for idx, keys in self.keys.items():
+            loc = sum(
+                1 for i, key in enumerate(keys)
+                if self.shard_count[(i, key)].get(home[idx], 0) >= self.k)
+            assert loc == self.local_support[idx], (
+                idx, loc, self.local_support[idx])
+        interesting: Set[BucketKey] = set()
+        seen_reps: Set[BucketKey] = set()
+        for b, mem in self.members.items():
+            nc = sum(1 for m in mem if self.support[m] > 0)
+            assert nc == self.n_cores.get(b, 0), (b, nc, self.n_cores.get(b))
+            bc = {m for m in mem
+                  if self._cls(self.support[m], self.local_support[m])
+                  == _BOUNDARY_CORE}
+            lc: Dict[int, int] = {}
+            for m in mem:
+                if (self._cls(self.support[m], self.local_support[m])
+                        == _LOCAL_CORE):
+                    lc[home[m]] = lc.get(home[m], 0) + 1
+            ent = self._reps.get(b)
+            if bc or lc:
+                seen_reps.add(b)
+                assert ent is not None, b
+                assert ent.bc == bc, (b, ent.bc, bc)
+                assert ent.lc_count == lc, (b, ent.lc_count, lc)
+                for s, m in ent.lc_rep.items():
+                    assert s in lc, (b, s)
+                    if m is not None:  # cached rep is a valid stand-in
+                        assert (home[m] == s and self.support[m] > 0
+                                and self.local_support[m] > 0 and m in mem), \
+                            (b, s, m)
+            else:
+                assert ent is None, (b, ent)
+            if bc or len(self.shard_count[b]) > 1:
+                interesting.add(b)
+        assert set(self._reps) == seen_reps
+        assert interesting == self.interesting

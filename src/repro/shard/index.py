@@ -1,15 +1,25 @@
 """``ShardedIndex`` — a ClusterIndex of ClusterIndexes.
 
-Points are routed by :class:`ShardRouter` (hash of the table-0 grid code
-into contiguous key ranges) to one of ``cfg.shards`` inner indices, each
-any registered grid-bucket backend (``cfg.inner_backend``: ``dynamic``,
+Points are routed by :class:`ShardRouter` (hash of the table-0 key into
+contiguous key ranges) to one of ``cfg.shards`` inner indices, each any
+registered grid-bucket backend (``cfg.inner_backend``: ``dynamic``,
 ``batched``, ``batched-device``, ``emz-static``).  Mutations fan out
 per-shard — ``insert_batch`` splits a run into per-shard sub-batches, so
-device backends keep their one-kernel-per-run hashing — and the
-:class:`BoundaryBridge` reconciles cross-shard structure so ``labels()``
-is the same global partition the single-shard inner backend computes
-(same cores and noise set; border-point ties — see bridge.py — may
-resolve to a different colliding cluster).
+device backends keep their one-kernel-per-run hashing, and with
+``cfg.workers > 1`` the sub-batches run concurrently on a thread pool
+(each shard's engine is only ever touched by one worker at a time; the
+:class:`BoundaryBridge` is the single shared structure and is updated by
+the coordinating thread).  The bridge reconciles cross-shard structure so
+``labels()`` is the same global partition the single-shard inner backend
+computes (same cores and noise set; border-point ties — see bridge.py —
+may resolve to a different colliding cluster).
+
+Query hot path: with ``cfg.incremental_merge`` (default) the bridge
+maintains its cross-shard union-find *under* the updates, so ``label()``
+resolves as inner-find -> bridge-find — no global relabel, no O(n) merge
+after a mutation.  ``incremental_merge=False`` restores the PR-2
+rebuild-per-query path (and is the only option for inner engines without
+``native_component_queries``, e.g. ``emz-static``).
 
 ``snapshot()`` nests the per-shard snapshots (flattened under
 ``shard<i>/`` keys, so it round-trips through
@@ -25,14 +35,16 @@ collision-graph components, so shard-local merges would over-connect) and
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
 from ..api.config import ClusterConfig
 from ..api.index import ClusterIndex
 from ..api.registry import build_index
-from ..core.dynamic_dbscan import check_unique_ids
+from ..core.dynamic_dbscan import NOISE, check_unique_ids
 from ..core.hashing import GridLSH
 from .bridge import BoundaryBridge
 from .router import RebalancePlan, ShardRouter
@@ -62,12 +74,28 @@ class ShardedIndex(ClusterIndex):
         # inner bucket keys bit-for-bit
         self.lsh = GridLSH(cfg.d, cfg.eps, cfg.t, seed=cfg.seed)
         self._mixed_keys = cfg.inner_backend in MIXED_KEY_BACKENDS
-        self.router = ShardRouter(self.lsh, cfg.shards, seed=cfg.seed)
+        # mixed-key inners: the router slots by the same device-hash pass
+        # that produces the bucket keys, so routing costs no extra pass
+        self.router = ShardRouter(self.lsh, cfg.shards, seed=cfg.seed,
+                                  mixed=self._mixed_keys)
+        # the incremental merge resolves border points through the home
+        # shard's native anchor query; recompute inners can't answer it
+        self._incremental = bool(cfg.incremental_merge) and all(
+            inner.native_component_queries for inner in self.inners
+        )
+        self.native_component_queries = self._incremental
         self.bridge = BoundaryBridge(cfg.t, cfg.k,
-                                     attach_orphans=cfg.attach_orphans)
+                                     attach_orphans=cfg.attach_orphans,
+                                     incremental=self._incremental)
+        self._pool: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=min(int(cfg.workers), cfg.shards),
+                               thread_name_prefix="shard")
+            if cfg.workers and cfg.workers > 1 and cfg.shards > 1 else None
+        )
         self._home: Dict[int, int] = {}  # idx -> shard
         self._next_idx = 0
         self._cache: Optional[Dict[int, int]] = None
+        self._comp_fns: Optional[List[Callable[[int], int]]] = None
 
     # ------------------------------------------------------------------ #
     # hashing (one vectorised pass per run, mirroring the inner key space)
@@ -75,27 +103,40 @@ class ShardedIndex(ClusterIndex):
     def _route_and_key(self, X: np.ndarray) -> Tuple[np.ndarray, List[List[bytes]]]:
         """(n, d) -> ((n,) target shards, per-point bucket keys).
 
-        The exact-key path shares one ``codes_batch`` pass between the
-        router (table-0 slice) and the bridge directory; the mixed-key
-        path needs its own float32 hash to match the inner engines'
-        buckets bit-for-bit, so it pays one extra pass.
-        """
+        One hash pass either way: the exact-key path shares a
+        ``codes_batch`` pass between the router (table-0 slice) and the
+        bridge directory; the mixed-key path shares the one
+        ``device_keys_batch`` pass the inner engines need anyway (the
+        router slots by the table-0 mixed key)."""
         t = self.cfg.t
         if self._mixed_keys:
-            c0 = self.lsh.codes_batch(X)[:, 0, :]
             mixed = self.lsh.device_keys_batch(X)  # (n, t, 2) int32
             keys = [[mixed[j, i].tobytes() for i in range(t)]
                     for j in range(X.shape[0])]
+            slots = self.router.slots_from_mixed(mixed[:, 0, :])
         else:
             codes = self.lsh.codes_batch(X)  # (n, t, d) int64
-            c0 = codes[:, 0, :]
             keys = [[codes[j, i].tobytes() for i in range(t)]
                     for j in range(X.shape[0])]
-        shards = self.router.assignment[self.router.slots_from_codes(c0)]
-        return shards, keys
+            slots = self.router.slots_from_codes(codes[:, 0, :])
+        return self.router.assignment[slots], keys
 
     def _keys_batch(self, X: np.ndarray) -> List[List[bytes]]:
         return self._route_and_key(X)[1]
+
+    # ------------------------------------------------------------------ #
+    # per-shard fan-out
+    # ------------------------------------------------------------------ #
+    def _fanout(self, jobs: Dict[int, Callable[[], Any]]) -> Dict[int, Any]:
+        """Run one job per shard, on the worker pool when it pays off.
+
+        Shards never share inner state, so per-shard jobs are safe to run
+        concurrently; results (and the first exception) are collected in
+        shard order, keeping the fan-out deterministic."""
+        if self._pool is None or len(jobs) <= 1:
+            return {s: fn() for s, fn in jobs.items()}
+        futures = {s: self._pool.submit(fn) for s, fn in jobs.items()}
+        return {s: futures[s].result() for s in sorted(futures)}
 
     # ------------------------------------------------------------------ #
     # mutations
@@ -133,12 +174,14 @@ class ShardedIndex(ClusterIndex):
         shards, keys = self._route_and_key(X)
         # fan out per shard, preserving in-shard stream order so batched
         # inners hash each sub-run in one kernel call
+        jobs: Dict[int, Callable[[], Any]] = {}
         for s in range(self.cfg.shards):
             rows = np.flatnonzero(shards == s)
             if rows.size:
-                self.inners[s].insert_batch(
-                    X[rows], ids=[out[j] for j in rows]
-                )
+                jobs[s] = (lambda s=s, rows=rows:
+                           self.inners[s].insert_batch(
+                               X[rows], ids=[out[j] for j in rows]))
+        self._fanout(jobs)
         for j in range(n):
             s = int(shards[j])
             self._home[out[j]] = s
@@ -162,26 +205,54 @@ class ShardedIndex(ClusterIndex):
         by_shard: Dict[int, List[int]] = {}
         for i in ids:
             by_shard.setdefault(self._home[i], []).append(i)
+        self._fanout({s: (lambda s=s, group=group:
+                          self.inners[s].delete_batch(group))
+                      for s, group in by_shard.items()})
         for s, group in by_shard.items():
-            self.inners[s].delete_batch(group)
             for i in group:
                 self.bridge.delete(i, s)
                 del self._home[i]
         self._cache = None
 
     # ------------------------------------------------------------------ #
-    # queries (global partition = inner partitions + bridge merge)
+    # queries (global partition = inner partitions + bridge structure)
     # ------------------------------------------------------------------ #
+    def _anchor_of(self, idx: int) -> Optional[int]:
+        """Home shard's native core-anchor (inner half of the find)."""
+        return self.inners[self._home[idx]].core_anchor_of(idx)
+
+    def _comp_of(self, idx: int) -> int:
+        """Home shard's native component handle (Euler-tour ROOT)."""
+        fns = self._comp_fns
+        if fns is None:  # bind once; the quotient build is call-heavy
+            fns = self._comp_fns = [inner.component_of
+                                    for inner in self.inners]
+        return fns[self._home[idx]](idx)
+
     def _all_labels(self) -> Dict[int, int]:
         if self._cache is None:
+            labs = self._fanout(
+                {s: (lambda s=s: self.inners[s].labels())
+                 for s in range(self.cfg.shards)})
             self._cache = self.bridge.merge(
-                inner.labels() for inner in self.inners
-            )
+                (labs[s] for s in sorted(labs)),
+                boundary_only=self._incremental)
         return self._cache
 
     def label(self, idx: int) -> int:
+        """Point query.  On the incremental path this is the hot-path
+        resolution — inner-find (Euler-tour ROOT on the home shard) ->
+        bridge-find (quotient over the maintained boundary-bucket set) —
+        and returns an *opaque* component handle (the protocol's
+        contract); ``labels()`` stays canonical."""
         if idx not in self._home:
             raise KeyError(idx)
+        if self._cache is not None:
+            return self._cache[idx]
+        if self._incremental:
+            r = self.bridge.resolve(idx, self._comp_of,
+                                    self._anchor_of(idx) is not None)
+            return NOISE if r is None else r
         return self._all_labels()[idx]
 
     def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
@@ -189,6 +260,32 @@ class ShardedIndex(ClusterIndex):
         if ids is None:
             return dict(all_lab)
         return {i: all_lab[i] for i in ids}
+
+    def component_of(self, idx: int) -> int:
+        return self.label(idx)
+
+    def core_anchor_of(self, idx: int) -> Optional[int]:
+        if idx not in self._home:
+            raise KeyError(idx)
+        if not self._incremental:
+            return super().core_anchor_of(idx)
+        if self.bridge.support[idx] > 0:
+            return idx
+        return self._anchor_of(idx)
+
+    def drain_deltas(self):
+        """Union of the inner change feeds (per-shard local handles).
+
+        Cross-shard component merges are not itemised per point — consult
+        ``stats()['bridge_epoch']`` / re-query ``label`` for listed ids.
+        Returns None when any inner engine does not track changes."""
+        out = []
+        for inner in self.inners:
+            d = inner.drain_deltas()
+            if d is None:
+                return None
+            out.extend(d)
+        return out
 
     def is_core(self, idx: int) -> bool:
         return self.bridge.is_core(idx)
@@ -283,14 +380,36 @@ class ShardedIndex(ClusterIndex):
                 assert self._home.get(i) == s, (i, s, self._home.get(i))
         assert sum(len(inner) for inner in self.inners) == len(self._home)
         self.bridge.check(self._home)
+        if self._incremental and self._home:
+            # the boundary-restricted labelling and the hot-path point
+            # queries agree with the full-directory merge oracle
+            oracle = self.bridge.merge(inner.labels() for inner in self.inners)
+            self.bridge.n_merge_passes -= 1  # oracle pass, not serving
+            assert self.labels() == oracle
+            fwd: Dict[int, int] = {}
+            rev: Dict[int, int] = {}
+            for i in self.ids():
+                r = self.bridge.resolve(i, self._comp_of,
+                                        self._anchor_of(i) is not None)
+                r = NOISE if r is None else r
+                assert (r == NOISE) == (oracle[i] == NOISE), (i, r, oracle[i])
+                if r != NOISE:  # handles <-> oracle labels bijectively
+                    assert fwd.setdefault(r, oracle[i]) == oracle[i], i
+                    assert rev.setdefault(oracle[i], r) == r, i
 
     def stats(self) -> Dict[str, int]:
         sizes = [len(inner) for inner in self.inners]
         out: Dict[str, int] = {
             "shards": self.cfg.shards,
+            "workers": self.cfg.workers,
+            "incremental_merge": int(self._incremental),
             "n_boundary_buckets": self.bridge.n_boundary_buckets,
+            "n_interesting_buckets": len(self.bridge.interesting),
             "n_merge_passes": self.bridge.n_merge_passes,
+            "n_boundary_merges": self.bridge.n_boundary_merges,
             "n_bridge_unions": self.bridge.n_bridge_unions,
+            "n_quotient_builds": self.bridge.n_quotient_builds,
+            "bridge_epoch": self.bridge.epoch,
             "max_shard_points": max(sizes) if sizes else 0,
             "min_shard_points": min(sizes) if sizes else 0,
         }

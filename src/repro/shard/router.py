@@ -10,8 +10,12 @@ ship between workers.
 
 Routing is placement only: clustering correctness never depends on which
 shard a point lands in (the boundary bridge reconciles cross-shard
-structure), so the router is free to use the exact float64 codes even
-when the inner engines bucket by float32 mixed keys.
+structure), so the slot may be derived from either key representation.
+With ``mixed=True`` the router slots points by the *table-0 mixed key*
+(the float32 device-hash pass), so a sharded index over a mixed-key inner
+engine runs exactly one hash pass per batch — the same pass that produces
+the inner bucket keys — instead of paying a second exact-code pass just
+for routing.
 """
 
 from __future__ import annotations
@@ -29,6 +33,18 @@ _SM_A = np.uint64(0xBF58476D1CE4E5B9)  # splitmix64 finalizer constants
 _SM_B = np.uint64(0x94D049BB133111EB)
 
 
+def _splitmix_slots(h: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer -> (n,) slot ids; the one mixing pipeline
+    both key families share, so their slot hashes can never diverge."""
+    with np.errstate(over="ignore"):
+        h ^= h >> np.uint64(30)
+        h *= _SM_A
+        h ^= h >> np.uint64(27)
+        h *= _SM_B
+        h ^= h >> np.uint64(31)
+    return (h & np.uint64(SLOTS - 1)).astype(np.int64)
+
+
 @dataclasses.dataclass(frozen=True)
 class RebalancePlan:
     """Move the slot range ``[start, stop)`` to shard ``target``."""
@@ -42,11 +58,13 @@ class ShardRouter:
     """Deterministic point -> shard assignment over ``SLOTS`` key slots."""
 
     def __init__(self, lsh: GridLSH, n_shards: int, seed: int = 0,
-                 assignment: Optional[np.ndarray] = None):
+                 assignment: Optional[np.ndarray] = None,
+                 mixed: bool = False):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.lsh = lsh
         self.n_shards = int(n_shards)
+        self.mixed = bool(mixed)  # slot by table-0 mixed key, not exact code
         # per-dimension odd multipliers for the slot hash, derived from the
         # config seed (stable across processes, unlike hash(bytes))
         rng = np.random.default_rng([int(seed) & 0x7FFFFFFF, 0x51A2D])
@@ -70,9 +88,24 @@ class ShardRouter:
     # ------------------------------------------------------------------ #
     def slots_batch(self, X: np.ndarray) -> np.ndarray:
         """(n, d) points -> (n,) key slots via splitmix64 of the table-0
-        grid code (one vectorised pass, no per-point hashing)."""
+        key (one vectorised pass, no per-point hashing).  Uses whichever
+        key family this router was built for, so every caller — insert
+        routing, rebalance planning, load inspection — slots a given
+        point identically."""
         X = np.asarray(X, dtype=np.float64)
+        if self.mixed:
+            return self.slots_from_mixed(self.lsh.device_keys_batch(X)[:, 0, :])
         return self.slots_from_codes(self.lsh.codes_batch(X)[:, 0, :])
+
+    def slots_from_mixed(self, m0: np.ndarray) -> np.ndarray:
+        """(n, 2) table-0 int32 mixed keys -> (n,) key slots (callers that
+        already ran ``device_keys_batch`` skip the second hashing pass)."""
+        m = (np.asarray(m0, dtype=np.int64).reshape(-1, 2)
+             & np.int64(0xFFFFFFFF)).astype(np.uint64)
+        with np.errstate(over="ignore"):
+            h = (m[:, 0] << np.uint64(32)) | m[:, 1]
+            h *= self._mult[0]  # seed-dependent pre-mix, then splitmix64
+        return _splitmix_slots(h)
 
     def slots_from_codes(self, c0: np.ndarray) -> np.ndarray:
         """(n, d) table-0 int64 grid codes -> (n,) key slots (callers that
@@ -80,12 +113,7 @@ class ShardRouter:
         c0 = np.asarray(c0, dtype=np.int64).astype(np.uint64)  # (n, d)
         with np.errstate(over="ignore"):
             h = (c0 * self._mult[None, :]).sum(axis=1, dtype=np.uint64)
-            h ^= h >> np.uint64(30)
-            h *= _SM_A
-            h ^= h >> np.uint64(27)
-            h *= _SM_B
-            h ^= h >> np.uint64(31)
-        return (h & np.uint64(SLOTS - 1)).astype(np.int64)
+        return _splitmix_slots(h)
 
     def shards_batch(self, X: np.ndarray) -> np.ndarray:
         """(n, d) points -> (n,) shard ids."""

@@ -216,7 +216,15 @@ def test_clusters_spanning_shard_boundaries_are_merged():
     lab = index.labels()
     assert len({v for v in lab.values() if v != -1}) == 1  # one cluster
     assert index.stats()["n_boundary_buckets"] > 0
-    assert index.stats()["n_bridge_unions"] > 0
+    # incremental path: labels() chained only the maintained boundary set
+    assert index.stats()["n_interesting_buckets"] > 0
+    assert index.stats()["n_boundary_merges"] >= 1
+    assert index.stats()["n_merge_passes"] == 0
+    # rebuild path: the same stream exercises the merge-pass chains
+    rebuild = build_index(cfg.replace(incremental_merge=False))
+    rebuild.insert_batch(X)
+    assert_same_partition(rebuild.labels(), lab)
+    assert rebuild.stats()["n_bridge_unions"] > 0
     # and it matches the unsharded reference exactly
     ref = build_index(cfg.replace(backend="dynamic"))
     ref.insert_batch(X)

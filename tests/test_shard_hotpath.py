@@ -1,0 +1,299 @@
+"""Query-hot-path tests for the sharded backend (PR 3).
+
+Property test: a seeded random interleaving of inserts / deletes /
+``label()`` / ``labels()`` at S ∈ {1, 2, 4} must answer every query
+exactly like a fresh index rebuilt from the full event history — with the
+incremental merge on and off, with the thread-pool fan-out on and off,
+and across ``rebalance()`` and snapshot/restore.  Plus the protocol
+additions (``component_of`` / ``core_anchor_of`` / ``drain_deltas``), the
+bridge's pre-validated mutation errors, and the single-hash-pass routing
+of mixed-key inners.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    NOISE,
+    ClusterConfig,
+    Delete,
+    Insert,
+    build_index,
+    restore_index,
+)
+from repro.data import blobs
+from repro.shard import BoundaryBridge, ShardedIndex
+
+from test_api import assert_same_partition
+
+
+def hot_cfg(shards, inner="dynamic", **kw):
+    base = dict(d=4, k=6, t=6, eps=0.45, seed=0, backend="sharded")
+    base.update(kw)
+    return ClusterConfig(shards=shards, inner_backend=inner, **base)
+
+
+def groups_of(lab):
+    """Partition of the labelling as a frozenset of frozensets (noise
+    kept separate so opaque label() ids compare against canonical ones)."""
+    noise = frozenset(i for i, v in lab.items() if v == NOISE)
+    by = {}
+    for i, v in lab.items():
+        if v != NOISE:
+            by.setdefault(v, set()).add(i)
+    return noise, frozenset(frozenset(g) for g in by.values())
+
+
+# ---------------------------------------------------------------------- #
+# the oracle property test (S3)
+# ---------------------------------------------------------------------- #
+def drive_interleaved(cfg, seed, n=360, with_restore=True, with_rebalance=True):
+    """Random insert/delete/query interleaving; every query is checked
+    against a fresh rebuild of the same event history."""
+    X, _ = blobs(n=n, d=cfg.d, n_clusters=4, cluster_std=0.2, seed=seed)
+    rng = np.random.default_rng(seed)
+    index = build_index(cfg)
+    oracle_cfg = cfg.replace(incremental_merge=False, workers=0)
+    events, alive, row, nxt = [], [], 0, 0
+    half_done = False
+    while row < n or alive:
+        # one update chunk: a run of inserts and/or a run of deletes
+        chunk = []
+        n_ins = int(rng.integers(0, 7)) if row < n else 0
+        for _ in range(min(n_ins, n - row)):
+            chunk.append(Insert(X[row], idx=nxt))
+            alive.append(nxt)
+            row += 1
+            nxt += 1
+        if alive and rng.random() < 0.6:
+            for _ in range(int(rng.integers(1, min(6, len(alive)) + 1))):
+                victim = alive.pop(int(rng.integers(len(alive))))
+                chunk.append(Delete(victim))
+        if not chunk:
+            break
+        events.extend(chunk)
+        index.apply(chunk)
+
+        # hot-path point queries against the full labelling
+        if alive:
+            lab = index.labels()
+            noise, parts = groups_of(lab)
+            probe = [alive[int(j)] for j in rng.integers(0, len(alive),
+                                                         size=min(8, len(alive)))]
+            point = {i: index.label(i) for i in probe}
+            p_noise, p_parts = groups_of(point)
+            assert p_noise == noise & set(probe)
+            for g in p_parts:  # co-labelled probes are co-clustered
+                assert any(g <= big for big in parts), (g, parts)
+
+        if with_rebalance and not half_done and row >= n // 2:
+            half_done = True
+            # snapshot/restore + rebalance mid-stream: partition invariant
+            before = index.labels()
+            index = restore_index(index.snapshot())
+            from repro.shard import SLOTS, RebalancePlan
+            index.rebalance(RebalancePlan(0, SLOTS // 3, cfg.shards - 1))
+            assert index.labels() == before
+            index.check_invariants()
+
+        # periodic exact-oracle check: fresh rebuild of the history
+        if rng.random() < 0.15:
+            oracle = build_index(oracle_cfg)
+            oracle.apply(events)
+            assert oracle.labels() == index.labels()
+
+    oracle = build_index(oracle_cfg)
+    oracle.apply(events)
+    assert oracle.labels() == index.labels()
+    index.check_invariants()
+    return index, events
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_interleaved_stream_matches_fresh_rebuild_oracle(seed, shards):
+    cfg = hot_cfg(shards, seed=seed)
+    index, events = drive_interleaved(cfg, seed)
+    # and the single-shard inner reference agrees on the partition
+    ref = build_index(ClusterConfig(d=4, k=6, t=6, eps=0.45, seed=seed))
+    ref.apply(events)
+    assert_same_partition(ref.labels(), index.labels())
+
+
+@pytest.mark.parametrize("incremental", [True, False])
+def test_workers_fanout_is_equivalent_to_serial(incremental):
+    cfg = hot_cfg(4, inner="batched", seed=3, incremental_merge=incremental)
+    serial, events = drive_interleaved(cfg, 3, with_rebalance=False)
+    threaded = build_index(cfg.replace(workers=2))
+    threaded.apply(events)
+    assert threaded._pool is not None
+    assert threaded.labels() == serial.labels()
+    threaded.check_invariants()
+
+
+def test_incremental_off_for_recompute_inner():
+    """emz-static has no native component queries: the index must fall
+    back to the rebuild merge even with incremental_merge=True."""
+    X, _ = blobs(n=150, d=4, n_clusters=3, cluster_std=0.15, seed=5)
+    sh = build_index(hot_cfg(2, inner="emz-static", seed=5))
+    assert sh._incremental is False
+    assert sh.native_component_queries is False
+    sh.insert_batch(X)
+    assert sh.stats()["n_merge_passes"] == 0
+    sh.labels()
+    assert sh.stats()["n_merge_passes"] == 1
+    with pytest.raises(NotImplementedError, match="core-anchor"):
+        sh.core_anchor_of(int(sh.ids()[0]))
+
+
+def test_incremental_label_avoids_merge_passes():
+    """The acceptance property in miniature: interleaved label() after
+    mutations never triggers a merge pass on the incremental path."""
+    X, _ = blobs(n=300, d=4, n_clusters=3, cluster_std=0.15, seed=7)
+    sh = build_index(hot_cfg(3, seed=7))
+    ids = sh.insert_batch(X[:250])
+    rng = np.random.default_rng(7)
+    for j in range(40):
+        sh.insert(X[250 + j % 50])
+        sh.delete(ids[j])
+        for _ in range(4):
+            sh.label(int(ids[int(rng.integers(40, len(ids)))]))
+    st = sh.stats()
+    assert st["n_merge_passes"] == 0
+    assert st["n_boundary_merges"] == 0  # no full labelling either
+    assert st["n_quotient_builds"] > 0   # label() built boundary quotients
+    assert st["bridge_epoch"] > 0
+    # the quotient is epoch-stamped: repeated queries between mutations
+    # reuse it instead of rebuilding
+    builds = st["n_quotient_builds"]
+    for _ in range(5):
+        sh.label(int(ids[50]))
+    assert sh.stats()["n_quotient_builds"] == builds
+
+
+# ---------------------------------------------------------------------- #
+# protocol additions: component_of / core_anchor_of / drain_deltas
+# ---------------------------------------------------------------------- #
+def test_component_of_and_core_anchor_contracts():
+    X, _ = blobs(n=200, d=4, n_clusters=3, cluster_std=0.15, seed=2)
+    for cfg in (ClusterConfig(d=4, k=6, t=6, eps=0.45, seed=2),
+                hot_cfg(3, seed=2)):
+        index = build_index(cfg)
+        assert index.native_component_queries
+        ids = index.insert_batch(X)
+        lab = index.labels()
+        for i in ids[::17]:
+            comp = index.component_of(i)
+            anchor = index.core_anchor_of(i)
+            if lab[i] == NOISE:
+                assert anchor is None
+            else:
+                assert anchor is not None
+                # the anchor is a core in the same cluster
+                assert index.is_core(anchor)
+                assert lab[anchor] == lab[i]
+                # component handles agree exactly with label()
+                assert comp == index.label(i)
+        with pytest.raises(KeyError):
+            index.component_of(10**9)
+
+
+def test_drain_deltas_feed():
+    X, _ = blobs(n=120, d=4, n_clusters=2, cluster_std=0.15, seed=4)
+    index = build_index(hot_cfg(2, seed=4))
+    assert index.drain_deltas() == []  # first call activates tracking
+    ids = index.insert_batch(X)
+    deltas = index.drain_deltas()
+    touched = {i for i, _, _ in deltas}
+    assert touched  # insertions produced attachment changes
+    assert touched <= set(ids)
+    for i, old, new in deltas:
+        assert old is None  # fresh points have no prior attachment
+    assert index.drain_deltas() == []  # drained
+    index.delete_batch(ids[:10])
+    gone = {i for i, _, new in index.drain_deltas() if new is None}
+    assert set(ids[:10]) <= gone
+    # recompute backends advertise "no tracking"
+    emz = build_index(ClusterConfig(d=4, k=6, t=6, eps=0.45, seed=4,
+                                    backend="emz-static"))
+    assert emz.drain_deltas() is None
+    sh = build_index(hot_cfg(2, inner="emz-static", seed=4))
+    assert sh.drain_deltas() is None
+
+
+def test_drain_deltas_reports_reanchored_then_deleted_point():
+    """Regression: a border point whose anchor dies, re-anchors, and is
+    then deleted within ONE drain period must still surface in the feed
+    as (idx, original-anchor, None) — the detach/re-attach records have
+    to compose under compaction instead of cancelling to a no-op."""
+    X, _ = blobs(n=300, d=4, n_clusters=3, cluster_std=0.25, seed=2)
+    index = build_index(ClusterConfig(d=4, k=8, t=8, eps=0.45, seed=2))
+    ids = index.insert_batch(X)
+    eng = index.engine
+    case = next((y, a) for y, a in sorted(eng.attach.items())
+                if a is not None and not eng.is_core(y))
+    y, a = case
+    index.drain_deltas()
+    index.delete(a)
+    if y in index and not eng.is_core(y) and eng.attach.get(y) is not None:
+        index.delete(y)
+        entries = [e for e in index.drain_deltas() if e[0] == y]
+        assert entries == [(y, a, None)]
+    else:  # layout shifted: still exercise delete-after-detach
+        if y in index:
+            index.delete(y)
+        assert all(new is None for i, _, new in index.drain_deltas()
+                   if i == y)
+    assert ids  # stream stayed live
+
+
+# ---------------------------------------------------------------------- #
+# bridge mutation errors are pre-validated and named (S2)
+# ---------------------------------------------------------------------- #
+def test_bridge_rejects_unknown_ids_before_mutating():
+    bridge = BoundaryBridge(t=2, k=2)
+    bridge.insert(0, [b"a", b"b"], shard=0)
+    bridge.insert(1, [b"a", b"c"], shard=1)
+    before = (dict(bridge.support), {b: set(m) for b, m in bridge.members.items()},
+              bridge.n_boundary_buckets)
+    with pytest.raises(KeyError, match="cannot delete index 7"):
+        bridge.delete(7, shard=0)
+    with pytest.raises(KeyError, match="cannot move index 7"):
+        bridge.move(7, 0, 1)
+    with pytest.raises(KeyError, match="index 1 already present"):
+        bridge.insert(1, [b"z", b"z"], shard=0)
+    after = (dict(bridge.support), {b: set(m) for b, m in bridge.members.items()},
+             bridge.n_boundary_buckets)
+    assert before == after  # nothing mutated
+    bridge.check({0: 0, 1: 1})
+
+
+# ---------------------------------------------------------------------- #
+# mixed-key inners route from the one device-hash pass (S1)
+# ---------------------------------------------------------------------- #
+def test_mixed_key_routing_shares_the_device_hash_pass(monkeypatch):
+    sh = build_index(hot_cfg(2, inner="batched", seed=6))
+    calls = {"codes": 0, "device": 0}
+    orig_codes = sh.lsh.codes_batch
+    orig_device = sh.lsh.device_keys_batch
+    monkeypatch.setattr(sh.lsh, "codes_batch",
+                        lambda X: calls.__setitem__("codes", calls["codes"] + 1)
+                        or orig_codes(X))
+    monkeypatch.setattr(sh.lsh, "device_keys_batch",
+                        lambda X: calls.__setitem__("device", calls["device"] + 1)
+                        or orig_device(X))
+    X, _ = blobs(n=64, d=4, n_clusters=2, cluster_std=0.2, seed=6)
+    sh.insert_batch(X)
+    assert calls == {"codes": 0, "device": 1}  # exactly one hash pass
+    # exact-key inners still share the single codes pass
+    she = build_index(hot_cfg(2, inner="dynamic", seed=6))
+    calls2 = {"codes": 0}
+    orig2 = she.lsh.codes_batch
+    monkeypatch.setattr(she.lsh, "codes_batch",
+                        lambda X: calls2.__setitem__("codes", calls2["codes"] + 1)
+                        or orig2(X))
+    she.insert_batch(X)
+    assert calls2 == {"codes": 1}
+    # routing is deterministic and placement-consistent under rebalance
+    assert isinstance(sh, ShardedIndex)
+    sh.check_invariants()
