@@ -25,6 +25,10 @@ def main(argv=None) -> None:
                              "paper_roofline", "roofline"])
     ap.add_argument("--workers", type=int, default=0,
                     help="thread-pool fan-out for the sharded backend")
+    ap.add_argument("--transport", default="local",
+                    choices=("local", "process"),
+                    help="sharded-backend transport for the serving bench "
+                         "(process = spawned per-shard server processes)")
     ap.add_argument("--backend", default="dynamic",
                     choices=available_backends(),
                     help="repro.api backend for the dynamic engine under test")
@@ -96,7 +100,7 @@ def main(argv=None) -> None:
                   batch=100 if args.smoke else 500,
                   rounds=3 if args.smoke else 4,
                   queries=8 if args.smoke else 16,
-                  inner=inner)
+                  inner=inner, transport=args.transport)
         for r in rows:
             emit(f"serving_mix/S{r['shards']}_w{r['workers']}_"
                  f"{'inc' if r['incremental'] else 'rebuild'}",

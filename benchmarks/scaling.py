@@ -5,7 +5,15 @@ paper's central speedup claim, measured directly.
 
 ``--shards 1 2 4 8`` runs the shard-count sweep instead: per-update
 throughput of ``backend="sharded"`` vs S on a mixed insert/delete stream
-(results/scaling_shards.json)."""
+(results/scaling_shards.json).
+
+``--shards 1 2 4 --transport process`` runs the *transport* sweep: for
+each S, update throughput with the thread-pool fan-out (``workers=S``,
+GIL-bound) vs the process fan-out (``transport="process"``, one server
+process per shard) — results/scaling_transport.json.  This is the
+thread-vs-process comparison the RPC boundary exists for: threads only
+overlap the hashing, processes parallelise the pure-Python forest
+updates themselves."""
 
 from __future__ import annotations
 
@@ -67,6 +75,82 @@ def run(max_n: int = 64000, probe: int = 200, seed: int = 0,
     return rows
 
 
+def _one_mixed_run(cfg, X, max_n: int, batch: int, probe_rounds: int) -> dict:
+    """Fill to ``max_n``, then time probe rounds of the sliding-window
+    update mix; returns throughput/latency plus index stats."""
+    index = build_index(cfg)
+    ids = []
+    n = 0
+    t_fill = time.perf_counter()
+    while n < max_n:
+        ids.extend(index.insert_batch(X[n:n + batch]))
+        n += batch
+    t_fill = time.perf_counter() - t_fill
+    t0 = time.perf_counter()
+    for _ in range(probe_rounds):
+        ids.extend(index.insert_batch(X[n:n + batch]))
+        n += batch
+        index.delete_batch(ids[:batch])
+        ids = ids[batch:]
+    dt = time.perf_counter() - t0
+    updates = 2 * batch * probe_rounds
+    t0 = time.perf_counter()
+    n_clusters = len({v for v in index.labels().values() if v >= 0})
+    t_labels = time.perf_counter() - t0
+    stats = index.stats()
+    index.close()
+    return {
+        "live_points": max_n,
+        "updates_per_s": updates / dt,
+        "us_per_update": dt / updates * 1e6,
+        "fill_s": t_fill,
+        "labels_s": t_labels,
+        "n_clusters": n_clusters,
+        "n_boundary_buckets": stats.get("n_boundary_buckets", 0),
+        "transport_round_trips": stats.get("transport_round_trips", 0),
+        "transport_bytes_sent": stats.get("transport_bytes_sent", 0),
+        "transport_bytes_received": stats.get("transport_bytes_received", 0),
+    }
+
+
+def run_transports(shards=(1, 2, 4), max_n: int = 16000, batch: int = 1000,
+                   probe_rounds: int = 4, seed: int = 0,
+                   inner: str = "batched"):
+    """Thread-pool vs process fan-out, same mixed workload, per S.
+
+    "thread" rows run ``transport="local", workers=S`` (the PR-3 path:
+    concurrency capped by the GIL — only the numpy hashing overlaps);
+    "process" rows run ``transport="process"`` (one spawned server per
+    shard, updates truly parallel, protocol bytes on the wire).  Writes
+    results/scaling_transport.json.
+    """
+    X, _ = blobs(n=max_n + batch * (probe_rounds + 1), d=10, n_clusters=10,
+                 seed=seed)
+    base = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed)
+    rows = []
+    for S in shards:
+        cfg_s = base.replace(backend="sharded", shards=S, inner_backend=inner)
+        for mode, cfg in (
+            ("thread", cfg_s.replace(workers=S, transport="local")),
+            ("process", cfg_s.replace(transport="process")),
+        ):
+            r = {"shards": S, "mode": mode, "inner": inner,
+                 **_one_mixed_run(cfg, X, max_n, batch, probe_rounds)}
+            rows.append(r)
+            print(f"S={S}  {mode:7s}  {r['updates_per_s']:10.0f} updates/s "
+                  f"({r['us_per_update']:8.1f} us/update)  "
+                  f"wire={r['transport_bytes_sent'] + r['transport_bytes_received']:>10d}B "
+                  f"round_trips={r['transport_round_trips']}")
+    for S in shards:
+        th = next(r for r in rows if r["shards"] == S and r["mode"] == "thread")
+        pr = next(r for r in rows if r["shards"] == S and r["mode"] == "process")
+        print(f"S={S}: process fan-out {pr['updates_per_s']/th['updates_per_s']:.2f}x "
+              "thread-pool update throughput")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "scaling_transport.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 def run_shards(shards=(1, 2, 4, 8), max_n: int = 16000, batch: int = 1000,
                probe_rounds: int = 4, seed: int = 0,
                inner: str = "batched"):
@@ -85,40 +169,11 @@ def run_shards(shards=(1, 2, 4, 8), max_n: int = 16000, batch: int = 1000,
         cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed)
         cfg = (cfg.replace(backend=inner) if S == 0 else
                cfg.replace(backend="sharded", shards=S, inner_backend=inner))
-        index = build_index(cfg)
-        ids = []
-        n = 0
-        t_fill = time.perf_counter()
-        while n < max_n:
-            ids.extend(index.insert_batch(X[n:n + batch]))
-            n += batch
-        t_fill = time.perf_counter() - t_fill
-        t0 = time.perf_counter()
-        for _ in range(probe_rounds):
-            ids.extend(index.insert_batch(X[n:n + batch]))
-            n += batch
-            index.delete_batch(ids[:batch])
-            ids = ids[batch:]
-        dt = time.perf_counter() - t0
-        updates = 2 * batch * probe_rounds
-        t0 = time.perf_counter()
-        n_clusters = len({v for v in index.labels().values() if v >= 0})
-        t_labels = time.perf_counter() - t0
-        stats = index.stats()
-        rows.append({
-            "shards": S,
-            "inner": inner,
-            "live_points": len(index),
-            "updates_per_s": updates / dt,
-            "us_per_update": dt / updates * 1e6,
-            "fill_s": t_fill,
-            "labels_s": t_labels,
-            "n_clusters": n_clusters,
-            "n_boundary_buckets": stats.get("n_boundary_buckets", 0),
-        })
+        rows.append({"shards": S, "inner": inner,
+                     **_one_mixed_run(cfg, X, max_n, batch, probe_rounds)})
         print(f"shards={S or 'off':>3}  {rows[-1]['updates_per_s']:10.0f} "
               f"updates/s  ({rows[-1]['us_per_update']:8.1f} us/update)  "
-              f"labels()={t_labels*1e3:7.1f}ms  "
+              f"labels()={rows[-1]['labels_s']*1e3:7.1f}ms  "
               f"boundary_buckets={rows[-1]['n_boundary_buckets']}")
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "scaling_shards.json").write_text(json.dumps(rows, indent=1))
@@ -134,8 +189,20 @@ def main(argv=None):
                          "--shards 1 2 4 8")
     ap.add_argument("--inner", default="batched",
                     help="inner engine for the shard sweep")
+    ap.add_argument("--transport", default="local",
+                    choices=("local", "process"),
+                    help="with --shards: 'process' runs the thread-pool "
+                         "vs process fan-out comparison "
+                         "(results/scaling_transport.json)")
     args = ap.parse_args(argv)
-    if args.shards:
+    if args.transport == "process" and not args.shards:
+        ap.error("--transport process is the thread-vs-process shard "
+                 "sweep; pass the shard counts too, e.g. "
+                 "--shards 1 2 4 --transport process")
+    if args.shards and args.transport == "process":
+        run_transports(tuple(args.shards), max_n=args.max_n,
+                       inner=args.inner)
+    elif args.shards:
         run_shards(tuple(args.shards), max_n=args.max_n, inner=args.inner)
     else:
         run(max_n=args.max_n, backend=args.backend)

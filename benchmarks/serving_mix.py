@@ -16,6 +16,7 @@ any mutation; the incremental bridge turns that into
 
   PYTHONPATH=src python -m benchmarks.serving_mix            # full sweep
   PYTHONPATH=src python -m benchmarks.serving_mix --smoke --workers 2
+  PYTHONPATH=src python -m benchmarks.serving_mix --smoke --transport process
 """
 
 from __future__ import annotations
@@ -40,12 +41,13 @@ def _pct(xs, q):
 
 def run_one(shards: int, workers: int, incremental: bool, *, n: int,
             batch: int, rounds: int, queries: int, inner: str = "batched",
-            seed: int = 0) -> dict:
+            transport: str = "local", seed: int = 0) -> dict:
     X, _ = blobs(n=n + batch * (rounds + 1), d=10, n_clusters=10, seed=seed)
     cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed,
                         workers=workers, incremental_merge=incremental)
     cfg = (cfg.replace(backend=inner) if shards <= 1 else
-           cfg.replace(backend="sharded", shards=shards, inner_backend=inner))
+           cfg.replace(backend="sharded", shards=shards, inner_backend=inner,
+                       transport=transport))
     index = build_index(cfg)
     rng = np.random.default_rng(seed)
 
@@ -86,12 +88,15 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
     n_clusters = len({v for v in index.labels().values() if v >= 0})
     t_labels = time.perf_counter() - t0
     stats = index.stats()
+    live_points = len(index)
+    index.close()
     return {
         "shards": shards,
         "workers": workers,
         "incremental": bool(incremental),
         "inner": inner,
-        "live_points": len(index),
+        "transport": transport if shards > 1 else "local",
+        "live_points": live_points,
         "updates_per_s": n_updates / t_updates,
         "label_after_update_p50_us": _pct(after_update_us, 50),
         "label_after_update_p99_us": _pct(after_update_us, 99),
@@ -102,23 +107,32 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
         "n_quotient_builds": stats.get("n_quotient_builds", 0),
         "n_interesting_buckets": stats.get("n_interesting_buckets", 0),
         "n_merge_passes": stats.get("n_merge_passes", 0),
+        # wire overhead (zero bytes on the local transport)
+        "transport_round_trips": stats.get("transport_round_trips", 0),
+        "transport_bytes_sent": stats.get("transport_bytes_sent", 0),
+        "transport_bytes_received": stats.get("transport_bytes_received", 0),
     }
 
 
 def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
         rounds: int = 4, queries: int = 16, inner: str = "batched",
-        seed: int = 0) -> list:
+        transport: str = "local", seed: int = 0) -> list:
     """Full sweep: every shard count with the serial/threaded fan-out and
     the incremental merge on/off (off only where it changes anything:
-    S > 1)."""
+    S > 1).  ``transport="process"`` runs the sharded rows out-of-process
+    (the incremental sweep stays on — the rebuild merge would hash the
+    whole directory over per-point round trips)."""
     rows = []
     for S in shards:
         for W in (workers if S > 1 else (0,)):
-            for inc in ((True, False) if S > 1 else (True,)):
+            incs = (True,) if S <= 1 or transport == "process" else (True, False)
+            for inc in incs:
                 r = run_one(S, W, inc, n=n, batch=batch, rounds=rounds,
-                            queries=queries, inner=inner, seed=seed)
+                            queries=queries, inner=inner,
+                            transport=transport, seed=seed)
                 rows.append(r)
-                print(f"S={S} workers={W} incremental={str(inc):5s}  "
+                print(f"S={S} workers={W} incremental={str(inc):5s} "
+                      f"transport={r['transport']:7s}  "
                       f"label/after-update p50={r['label_after_update_p50_us']:10.1f}us "
                       f"p99={r['label_after_update_p99_us']:10.1f}us  "
                       f"steady p50={r['label_steady_p50_us']:7.1f}us  "
@@ -147,16 +161,20 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, nargs="+", default=None)
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--inner", default="batched")
+    ap.add_argument("--transport", default="local",
+                    choices=("local", "process"),
+                    help="run the sharded rows through in-process shards "
+                         "or spawned per-shard server processes")
     args = ap.parse_args(argv)
     if args.smoke:
         run(shards=tuple(args.shards or (1, 2)),
             workers=tuple(args.workers or (0, 2)),
             n=args.n or 1200, batch=100, rounds=3, queries=8,
-            inner=args.inner)
+            inner=args.inner, transport=args.transport)
     else:
         run(shards=tuple(args.shards or (1, 4, 8)),
             workers=tuple(args.workers or (0, 4)),
-            n=args.n or 16000, inner=args.inner)
+            n=args.n or 16000, inner=args.inner, transport=args.transport)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@ a CLI flag:
     PYTHONPATH=src python examples/streaming_clustering.py
     PYTHONPATH=src python examples/streaming_clustering.py --backend batched
     PYTHONPATH=src python examples/streaming_clustering.py --backend batched --shards 4
+    PYTHONPATH=src python examples/streaming_clustering.py --backend batched \
+        --shards 4 --transport process     # shards as spawned server processes
 """
 import argparse
 import time
@@ -22,11 +24,14 @@ ap.add_argument("--backend", default="dynamic", choices=available_backends())
 ap.add_argument("--baseline", default="emz-static", choices=available_backends())
 ap.add_argument("--shards", type=int, default=0,
                 help="shard the engine under test across S LSH key ranges")
+ap.add_argument("--transport", default="local", choices=("local", "process"),
+                help="reach the shards in-process or as spawned servers")
 args = ap.parse_args()
 
 n, d, batch = 12000, 8, 1000
 X, y = blobs(n=n, d=d, n_clusters=8, cluster_std=0.2, seed=3)
-cfg = ClusterConfig(d=d, k=10, t=10, eps=0.5, seed=0)
+cfg = ClusterConfig(d=d, k=10, t=10, eps=0.5, seed=0,
+                    transport=args.transport)
 
 dyn = build_index(cfg.replace(backend=args.backend).with_shards(args.shards))
 emz = build_index(cfg.replace(backend=args.baseline))
@@ -56,3 +61,5 @@ print(f"deleted {n//2} points in {time.time()-t0:.2f}s "
 lab = dyn.labels(ids[n // 2 :])
 pred = np.array([lab[i] for i in ids[n // 2 :]])
 print("post-expiry ARI:", round(adjusted_rand_index(y[n // 2 :], pred), 3))
+dyn.close()  # shuts shard worker processes down under --transport process
+emz.close()

@@ -32,6 +32,11 @@ from .config import ClusterConfig
 from .index import ClusterIndex
 from .registry import register_backend
 
+#: backends keyed by the float32 device-hash mixed keys rather than exact
+#: int64 grid codes — consumers that must mirror an engine's bucket-key
+#: space (shard router, bridge directory, service digests) branch on this
+MIXED_KEY_BACKENDS = ("batched", "batched-device")
+
 
 class EulerTourIndex(ClusterIndex):
     """Adapter over the dynamic engines (shared DynamicDBSCAN machinery)."""

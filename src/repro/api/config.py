@@ -29,6 +29,11 @@ class ClusterConfig:
     incremental_merge: bool = True  # backend="sharded": maintain the
     #                              cross-shard union-find under updates
     #                              (False = rebuild per query, PR-2 path)
+    transport: str = "local"     # backend="sharded": how the coordinator
+    #                              reaches its shards — "local" (in-process,
+    #                              zero-copy) or "process" (one spawned
+    #                              server process per shard, wire protocol
+    #                              over sockets; GIL-free update fan-out)
 
     def __post_init__(self):
         # Validate at construction with named messages instead of failing
@@ -49,6 +54,11 @@ class ClusterConfig:
             raise ValueError(f"workers must be >= 0, got {self.workers}")
         if self.inner_backend == "sharded":
             raise ValueError("inner_backend cannot itself be 'sharded'")
+        if self.transport not in ("local", "process"):
+            raise ValueError(
+                f"unknown transport {self.transport!r} "
+                "(expected 'local' or 'process')"
+            )
 
     def replace(self, **changes: Any) -> "ClusterConfig":
         return dataclasses.replace(self, **changes)

@@ -193,6 +193,20 @@ class ClusterIndex(abc.ABC):
         self._load_state(snapshot["state"])
 
     # ---------------------------------------------------------------- #
+    # lifecycle
+    # ---------------------------------------------------------------- #
+    def close(self) -> None:
+        """Release external resources (worker processes, sockets, thread
+        pools).  No-op for in-process backends; idempotent.  The index is
+        unusable afterwards."""
+
+    def __enter__(self) -> "ClusterIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------------- #
     # diagnostics
     # ---------------------------------------------------------------- #
     def check_invariants(self) -> None:

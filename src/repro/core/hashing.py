@@ -55,11 +55,16 @@ class GridLSH:
         c = self.codes(np.asarray(x, dtype=np.float64))
         return [c[i].tobytes() for i in range(self.t)]
 
-    def codes_batch(self, X: np.ndarray) -> np.ndarray:
-        """(n, d) -> (n, t, d) int64 grid codes."""
+    def codes_batch(self, X: np.ndarray, tables: int = None) -> np.ndarray:
+        """(n, d) -> (n, t, d) int64 grid codes.
+
+        ``tables=m`` restricts the pass to the first ``m`` tables (the
+        shard router only needs table 0), bit-identical to slicing the
+        full result."""
         X = np.asarray(X, dtype=np.float64)
+        eta = self.eta if tables is None else self.eta[:tables]
         return np.floor(
-            (X[:, None, :] + self.eta[None, :, None]) * self.inv_cell
+            (X[:, None, :] + eta[None, :, None]) * self.inv_cell
         ).astype(np.int64)
 
     def keys_batch(self, X: np.ndarray) -> list:
@@ -83,21 +88,25 @@ class GridLSH:
         h = h ^ lsr(h, 16)
         return h
 
-    def device_keys_batch(self, X: np.ndarray) -> np.ndarray:
+    def device_keys_batch(self, X: np.ndarray, tables: int = None) -> np.ndarray:
         """(n, d) -> (n, t, 2) int32 keys; bit-exact numpy mirror of the
         Pallas kernel (f32 grid quantisation + two int32 universal mixes).
 
         Used to validate the kernel and as the host fallback for the
         batched update path.  Spurious cross-code collisions ~ 2^-64.
+        ``tables=m`` restricts the pass to the first ``m`` tables
+        (elementwise per table, so bit-identical to slicing).
         """
         X32 = np.asarray(X, dtype=np.float32)
+        eta = self.eta if tables is None else self.eta[:tables]
+        mixers = self.mixers if tables is None else self.mixers[:, :tables]
         codes = np.floor(
-            (X32[:, None, :] + self.eta.astype(np.float32)[None, :, None])
+            (X32[:, None, :] + eta.astype(np.float32)[None, :, None])
             * np.float32(self.inv_cell)
         ).astype(np.int32)  # (n, t, d)
         with np.errstate(over="ignore"):
-            acc_a = (codes * self.mixers[0][None]).sum(axis=-1, dtype=np.int32)
-            acc_b = (codes * self.mixers[1][None]).sum(axis=-1, dtype=np.int32)
+            acc_a = (codes * mixers[0][None]).sum(axis=-1, dtype=np.int32)
+            acc_b = (codes * mixers[1][None]).sum(axis=-1, dtype=np.int32)
             out = np.stack(
                 [self._avalanche(acc_a), self._avalanche(acc_b)], axis=-1
             )

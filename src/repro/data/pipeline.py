@@ -65,11 +65,14 @@ class CurationFilter:
     def __init__(self, d: int, k: int = 10, t: int = 10, eps: float = 0.75,
                  policy: str = "balance", window: int = 50_000,
                  max_per_cluster_frac: float = 0.25, seed: int = 0,
-                 backend: str = "batched", shards: int = 1):
-        # shards > 1 shards the window by LSH key range (backend = inner)
+                 backend: str = "batched", shards: int = 1,
+                 transport: str = "local"):
+        # shards > 1 shards the window by LSH key range (backend = inner);
+        # transport="process" runs those shards out-of-process
         self.index = build_index(
             ClusterConfig(d=d, k=k, t=t, eps=eps, seed=seed,
-                          backend=backend).with_shards(shards)
+                          backend=backend,
+                          transport=transport).with_shards(shards)
         )
         self.policy = policy
         self.window = window
@@ -106,6 +109,10 @@ class CurationFilter:
         self.n_seen += n
         self.n_kept += int(keep.sum())
         return keep
+
+    def close(self) -> None:
+        """Shut down the window index (worker processes, if any)."""
+        self.index.close()
 
 
 class Pipeline:

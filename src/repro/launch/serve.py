@@ -28,6 +28,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--cluster", action="store_true",
                     help="dynamic-DBSCAN request clustering")
+    ap.add_argument("--cluster-shards", type=int, default=1,
+                    help="shard the request-clustering window across S "
+                         "LSH key ranges")
+    ap.add_argument("--cluster-transport", default="local",
+                    choices=("local", "process"),
+                    help="how the clustering shards are reached: in-process "
+                         "or spawned per-shard server processes")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,7 +43,9 @@ def main(argv=None):
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, batch=args.batch, kv_len=args.kv_len,
-                        cluster_requests=args.cluster, embed_dim=8)
+                        cluster_requests=args.cluster, embed_dim=8,
+                        cluster_shards=args.cluster_shards,
+                        cluster_transport=args.cluster_transport)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -54,6 +63,7 @@ def main(argv=None):
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
     for rid in sorted(done)[:4]:
         print(f"  req {rid}: {done[rid].out_tokens}")
+    eng.close()
     return done
 
 

@@ -1,0 +1,61 @@
+"""repro.service — the shard wire protocol, transport-agnostic.
+
+The shard-facing API surface of the sharded backend, reified as typed
+request/response messages with fixed-dtype numpy payloads over a
+length-prefixed npz framing codec:
+
+    from repro.service import (ClusterService, LocalTransport,
+                               ProcessTransport, connect_shards)
+
+  * :mod:`~repro.service.messages` — ``InsertBatchReq`` /
+    ``DeleteBatchReq`` / ``LabelsReq`` / ``ComponentOfReq`` /
+    ``SnapshotReq`` / ``DrainDeltasReq`` / … and their responses;
+  * :mod:`~repro.service.codec` — message <-> npz frame;
+  * :class:`~repro.service.service.ClusterService` — any registered
+    ClusterIndex backend served behind the protocol;
+  * :class:`~repro.service.transport.ShardClient` — the client ABC with
+    two transports: ``LocalTransport`` (in-process, zero-copy) and
+    ``ProcessTransport`` (spawned per-shard server processes, GIL-free
+    update fan-out).  ``ClusterConfig(transport="local"|"process")``
+    selects one for ``backend="sharded"``; cross-host sharding is "write
+    a TCP ``request()``", not a redesign.
+"""
+
+from .codec import decode, encode, read_frame, write_frame  # noqa: F401
+from .messages import MESSAGE_TYPES, Message  # noqa: F401
+from .messages import (  # noqa: F401
+    CheckInvariantsReq,
+    ComponentOfBatchReq,
+    ComponentOfReq,
+    CoreAnchorOfReq,
+    DeleteBatchReq,
+    DrainDeltasReq,
+    DrainDeltasResp,
+    ErrorResp,
+    HelloReq,
+    HelloResp,
+    IdsReq,
+    IdsResp,
+    InsertBatchReq,
+    InsertBatchResp,
+    LabelsReq,
+    LabelsResp,
+    OkResp,
+    RestoreReq,
+    ShutdownReq,
+    SnapshotReq,
+    SnapshotResp,
+    StatsReq,
+    StatsResp,
+    ValueResp,
+    ValuesResp,
+)
+from .service import ClusterService, serve_connection  # noqa: F401
+from .transport import (  # noqa: F401
+    TRANSPORTS,
+    LocalTransport,
+    ProcessTransport,
+    ShardClient,
+    ShardUnavailableError,
+    connect_shards,
+)

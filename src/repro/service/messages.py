@@ -1,0 +1,301 @@
+"""Typed wire messages of the shard protocol.
+
+One message class per operation in the paper's AddPoint / DeletePoint /
+GetCluster set (plus the structural queries the sharded hot path needs:
+``component_of`` / ``core_anchor_of`` / ``drain_deltas``, and the
+lifecycle ops: snapshot / restore / stats / shutdown).  A message is a
+plain dataclass whose fields are either
+
+  * fixed-dtype numpy arrays (declared in ``_dtypes`` and coerced at
+    construction, so both ends of the wire agree bit-for-bit),
+  * string-keyed dicts of arrays (declared in ``_array_dicts`` — used for
+    snapshot state payloads), or
+  * JSON-able scalars/dicts (everything else).
+
+The split is what makes the npz framing codec (:mod:`repro.service.codec`)
+generic: arrays travel as raw ``.npy`` members, everything else in one
+JSON header.  ``None`` marks an optional field as absent.
+
+Mutation responses piggyback two digests for the coordinator:
+
+  * ``digest`` on :class:`InsertBatchResp` — the inserted points'
+    bucket-key digest, one ``(t, w)`` row per point in request order
+    (``w = d`` int64 grid codes for exact-key engines, ``w = 2`` int32
+    mixed keys for the device-hash engines).  Feeding the coordinator's
+    :class:`~repro.shard.bridge.BoundaryBridge` directory from this
+    digest moves the full t-table hash off the coordinator: it routes on
+    a table-0-only pass and the shards hash in parallel.
+  * ``n_live`` on every mutation response — the shard's live-point count
+    (the support-side digest the coordinator's stats/rebalance planning
+    read without an extra round trip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Optional, Tuple, Type
+
+import numpy as np
+
+MESSAGE_TYPES: Dict[str, Type["Message"]] = {}
+
+
+def register_message(cls: Type["Message"]) -> Type["Message"]:
+    """Class decorator: key ``cls`` by its ``kind`` for the codec."""
+    if not cls.kind:
+        raise ValueError(f"{cls.__name__} has no kind")
+    if cls.kind in MESSAGE_TYPES:
+        raise ValueError(f"duplicate message kind {cls.kind!r}")
+    MESSAGE_TYPES[cls.kind] = cls
+    return cls
+
+
+@dataclasses.dataclass
+class Message:
+    kind: ClassVar[str] = ""
+    #: field -> required numpy dtype (coerced in __post_init__)
+    _dtypes: ClassVar[Dict[str, Any]] = {}
+    #: fields holding {str: ndarray} payloads (snapshot state)
+    _array_dicts: ClassVar[Tuple[str, ...]] = ()
+
+    def __post_init__(self):
+        for name, dtype in self._dtypes.items():
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(
+                    self, name, np.ascontiguousarray(v, dtype=dtype))
+
+
+# ---------------------------------------------------------------------- #
+# mutations
+# ---------------------------------------------------------------------- #
+@register_message
+@dataclasses.dataclass
+class InsertBatchReq(Message):
+    kind = "insert_batch"
+    _dtypes = {"X": np.float64, "ids": np.int64}
+    X: np.ndarray            # (n, d) points
+    ids: np.ndarray          # (n,) pre-claimed handles
+    want_digest: bool = False  # piggyback the bucket-key digest
+
+
+@register_message
+@dataclasses.dataclass
+class InsertBatchResp(Message):
+    kind = "insert_batch_resp"
+    _dtypes = {"ids": np.int64}
+    ids: np.ndarray                       # (n,) assigned handles
+    digest: Optional[np.ndarray] = None   # (n, t, w) bucket-key digest
+    n_live: int = 0
+
+
+@register_message
+@dataclasses.dataclass
+class DeleteBatchReq(Message):
+    kind = "delete_batch"
+    _dtypes = {"ids": np.int64}
+    ids: np.ndarray          # (n,) handles to delete
+
+
+@register_message
+@dataclasses.dataclass
+class OkResp(Message):
+    kind = "ok"
+    n_live: int = 0
+
+
+# ---------------------------------------------------------------------- #
+# queries
+# ---------------------------------------------------------------------- #
+@register_message
+@dataclasses.dataclass
+class LabelsReq(Message):
+    kind = "labels"
+    _dtypes = {"ids": np.int64}
+    ids: Optional[np.ndarray] = None  # None = all live points
+
+
+@register_message
+@dataclasses.dataclass
+class LabelsResp(Message):
+    kind = "labels_resp"
+    _dtypes = {"ids": np.int64, "labels": np.int64}
+    ids: np.ndarray
+    labels: np.ndarray
+
+
+@register_message
+@dataclasses.dataclass
+class ComponentOfReq(Message):
+    kind = "component_of"
+    idx: int = 0
+
+
+@register_message
+@dataclasses.dataclass
+class ComponentOfBatchReq(Message):
+    """Batched native find — one round trip resolves a whole quotient
+    build's representatives on this shard."""
+
+    kind = "component_of_batch"
+    _dtypes = {"ids": np.int64}
+    ids: np.ndarray = None
+
+
+@register_message
+@dataclasses.dataclass
+class ValuesResp(Message):
+    kind = "values"
+    values: Optional[list] = None  # encoded handles, request order
+
+
+@register_message
+@dataclasses.dataclass
+class CoreAnchorOfReq(Message):
+    kind = "core_anchor_of"
+    idx: int = 0
+
+
+@register_message
+@dataclasses.dataclass
+class ValueResp(Message):
+    kind = "value"
+    value: Any = None  # int handle, encoded tuple handle, or None
+
+
+@register_message
+@dataclasses.dataclass
+class DrainDeltasReq(Message):
+    kind = "drain_deltas"
+
+
+@register_message
+@dataclasses.dataclass
+class DrainDeltasResp(Message):
+    kind = "drain_deltas_resp"
+    _dtypes = {"deltas": np.int64}
+    # (n, 3) rows of (idx, old, new); -1 encodes None (handles are >= 0)
+    deltas: Optional[np.ndarray] = None
+    tracked: bool = False
+
+
+@register_message
+@dataclasses.dataclass
+class IdsReq(Message):
+    kind = "ids"
+
+
+@register_message
+@dataclasses.dataclass
+class IdsResp(Message):
+    kind = "ids_resp"
+    _dtypes = {"ids": np.int64}
+    ids: np.ndarray
+
+
+@register_message
+@dataclasses.dataclass
+class StatsReq(Message):
+    kind = "stats"
+
+
+@register_message
+@dataclasses.dataclass
+class StatsResp(Message):
+    kind = "stats_resp"
+    stats: Optional[Dict[str, int]] = None
+    n_live: int = 0
+
+
+# ---------------------------------------------------------------------- #
+# lifecycle
+# ---------------------------------------------------------------------- #
+@register_message
+@dataclasses.dataclass
+class HelloReq(Message):
+    """Handshake: capability discovery + liveness check in one trip."""
+
+    kind = "hello"
+
+
+@register_message
+@dataclasses.dataclass
+class HelloResp(Message):
+    kind = "hello_resp"
+    backend: str = ""
+    native_component_queries: bool = False
+    n_live: int = 0
+
+
+@register_message
+@dataclasses.dataclass
+class SnapshotReq(Message):
+    kind = "snapshot"
+
+
+@register_message
+@dataclasses.dataclass
+class SnapshotResp(Message):
+    kind = "snapshot_resp"
+    _array_dicts = ("state",)
+    state: Optional[Dict[str, np.ndarray]] = None
+
+
+@register_message
+@dataclasses.dataclass
+class RestoreReq(Message):
+    kind = "restore"
+    _array_dicts = ("state",)
+    config: Optional[Dict[str, Any]] = None
+    state: Optional[Dict[str, np.ndarray]] = None
+
+
+@register_message
+@dataclasses.dataclass
+class CheckInvariantsReq(Message):
+    kind = "check_invariants"
+
+
+@register_message
+@dataclasses.dataclass
+class ShutdownReq(Message):
+    kind = "shutdown"
+
+
+@register_message
+@dataclasses.dataclass
+class ErrorResp(Message):
+    """An exception crossing the wire; the client re-raises it by name."""
+
+    kind = "error"
+    etype: str = "RuntimeError"
+    arg: Any = None  # first exception arg when JSON-able, else str(exc)
+
+
+# component-handle wire encoding: the engines' native find returns either
+# a point handle (int) or an Euler-tour node payload (a flat tuple of
+# strs/ints, e.g. ("edge", u, v)).  JSON turns tuples into lists, so the
+# client re-tuples on decode — both transports then return the exact same
+# handle values (the oracle-equivalence contract).
+def encode_handle(v):
+    if v is None or isinstance(v, (int, np.integer)):
+        return None if v is None else int(v)
+    if isinstance(v, (tuple, list)):
+        return [e if isinstance(e, str) else int(e) for e in v]
+    raise TypeError(f"component handle {v!r} is not wire-encodable")
+
+
+def decode_handle(v):
+    return tuple(v) if isinstance(v, list) else v
+
+
+# handle-encoding helpers for DrainDeltasResp (-1 = None; handles >= 0)
+def encode_deltas(deltas) -> np.ndarray:
+    enc = lambda v: -1 if v is None else int(v)  # noqa: E731
+    return np.asarray([(i, enc(old), enc(new)) for i, old, new in deltas],
+                      dtype=np.int64).reshape(-1, 3)
+
+
+def decode_deltas(arr: np.ndarray) -> list:
+    dec = lambda v: None if v == -1 else int(v)  # noqa: E731
+    return [(int(r[0]), dec(r[1]), dec(r[2])) for r in arr]

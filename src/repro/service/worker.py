@@ -1,0 +1,39 @@
+"""Shard server process: ``python -m repro.service.worker``.
+
+Spawned by :class:`~repro.service.transport.ProcessTransport` with an
+inherited socket fd and the shard's inner ClusterConfig as JSON; builds
+the index, serves the frame loop until shutdown/EOF, exits.  Runnable by
+hand against any socket fd for debugging.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fd", type=int, required=True,
+                    help="inherited stream-socket file descriptor")
+    ap.add_argument("--config", required=True,
+                    help="ClusterConfig of the served index, as JSON")
+    args = ap.parse_args(argv)
+
+    # import late: argparse errors shouldn't cost a numpy import
+    from ..api import ClusterConfig, build_index
+    from .service import ClusterService, serve_connection
+
+    cfg = ClusterConfig.from_dict(json.loads(args.config))
+    sock = socket.socket(fileno=args.fd)
+    try:
+        serve_connection(ClusterService(build_index(cfg)), sock)
+    finally:
+        sock.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

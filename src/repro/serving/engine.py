@@ -15,9 +15,10 @@ window — again the paper's insert+delete workload.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,10 @@ class Request:
     embedding: Optional[np.ndarray] = None
     out_tokens: Optional[List[int]] = None
     cluster: Optional[int] = None
+    # engine-managed state, declared so snapshots/introspection and type
+    # checkers see the full shape of an in-flight request
+    _cidx: Optional[int] = None   # clusterer handle of this request's embedding
+    _next: Optional[int] = None   # next token to feed the fused decode step
 
 
 class ServingEngine:
@@ -43,7 +48,8 @@ class ServingEngine:
                  embed_dim: int = 8, mesh=None,
                  cluster_backend: str = "batched",
                  cluster_shards: int = 1,
-                 cluster_workers: int = 0):
+                 cluster_workers: int = 0,
+                 cluster_transport: str = "local"):
         self.model = model
         self.params = params
         self.B = batch
@@ -63,16 +69,21 @@ class ServingEngine:
         # cluster_shards > 1 shards the request-clustering window by LSH
         # key range (cluster_backend becomes the per-shard inner engine);
         # cluster_workers > 1 fans the per-shard sub-batches out on a
-        # thread pool.  label() on the sharded backend is an incremental
-        # point query, so per-request labelling stays off the O(n) path.
+        # thread pool, and cluster_transport="process" runs each shard as
+        # its own server process (GIL-free updates).  label() on the
+        # sharded backend is an incremental point query, so per-request
+        # labelling stays off the O(n) path.
         self.clusterer = (
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
                                       backend=cluster_backend,
-                                      workers=cluster_workers)
+                                      workers=cluster_workers,
+                                      transport=cluster_transport)
                         .with_shards(cluster_shards))
             if cluster_requests else None
         )
-        self._req_window: List[int] = []
+        # sliding admission window: evicted at the head on every submit
+        # past capacity — deque keeps that O(1) at high request rates
+        self._req_window: Deque[int] = collections.deque()
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -83,7 +94,7 @@ class ServingEngine:
             req._cidx = idx
             self._req_window.append(idx)
             if len(self._req_window) > 4 * self.B:
-                self.clusterer.delete(self._req_window.pop(0))
+                self.clusterer.delete(self._req_window.popleft())
             # change feed as a refresh trigger: attachment deltas
             # under-report merges (a bridging core — or a cross-shard
             # union — changes handles of points it never touched), so a
@@ -93,7 +104,7 @@ class ServingEngine:
             # O(window).
             if self.clusterer.drain_deltas() != []:
                 for r in (*self.queue, *filter(None, self.slots)):
-                    i = getattr(r, "_cidx", None)
+                    i = r._cidx
                     if i is not None and i in self.clusterer:
                         r.cluster = self.clusterer.label(i)
         self.queue.append(req)
@@ -170,3 +181,9 @@ class ServingEngine:
                 break
             self.step()
         return self.done
+
+    def close(self) -> None:
+        """Release the clusterer's external resources (shard worker
+        processes under ``cluster_transport="process"``)."""
+        if self.clusterer is not None:
+            self.clusterer.close()

@@ -9,10 +9,12 @@
 
 Everything downstream of ``build_index`` (serving, curation, examples,
 benchmarks) gets sharding for free; see :mod:`repro.shard.index` for the
-architecture (router / inner engines / boundary bridge).  ``label()`` is
+architecture (router / shard clients / boundary bridge).  ``label()`` is
 an incremental point query (inner-find -> bridge-find over the maintained
 boundary-bucket set) unless ``incremental_merge=False`` restores the
-rebuild-per-query merge.
+rebuild-per-query merge.  ``transport="process"`` runs each shard as a
+spawned server process behind the :mod:`repro.service` wire protocol —
+bit-identical results, GIL-free update fan-out.
 """
 
 from ..api.config import ClusterConfig

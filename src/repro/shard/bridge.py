@@ -395,45 +395,64 @@ class BoundaryBridge:
     # ------------------------------------------------------------------ #
     # incremental queries: inner-find -> bridge-find over the boundary
     # ------------------------------------------------------------------ #
-    def _quotient(self, comp_of: Callable[[int], int]) -> Dict[int, int]:
+    def _quotient(self, comp_of: Callable[[int], int],
+                  comp_of_batch: Optional[Callable] = None) -> Dict[int, int]:
         """The epoch's quotient union-find over inner component handles:
         chain every interesting bucket's merge representatives through
         their current inner components.  A handle is whatever the inner
         engine's native find returns (for the Euler-tour engines, the
         forest's canonical node payload, built from globally-unique point
         handles) — orderable and never colliding across shards, so the
-        handle alone keys the node.  The
-        representatives are maintained under the updates themselves, so
-        the build does no directory scans — its cost is one inner ROOT
-        per distinct representative (memoised across buckets)."""
+        handle alone keys the node.  The representatives are maintained
+        under the updates themselves, so the build does no directory
+        scans — its cost is one inner ROOT per distinct representative
+        (memoised across buckets).
+
+        Three phases — gather, resolve, chain — so a remote-shard caller
+        can pass ``comp_of_batch`` and resolve every representative in
+        one round trip per shard instead of one per ROOT walk.  The
+        result is identical either way: union is by min handle, so the
+        final roots do not depend on resolution or chaining order.
+        """
         if self._q_epoch == self.epoch:
             return self._q_parent
-        parent: Dict[int, int] = {}
-        # Inner-ROOT memo.  Locally-core cores sharing one (shard,
-        # table-0 cell) are provably one inner component — the home
-        # forest chains every bucket it sees, and a table-0 bucket never
-        # spans shards — so their memo key is the cell, collapsing the
-        # root walks to one per distinct cell.  Boundary cores are not
-        # locally chained and memoise per point.
-        cell_memo: Dict[Tuple[int, bytes], int] = {}
-        bc_memo: Dict[int, int] = {}
         keys = self.keys
         home = self.home
-
-        def lc_node(m: int) -> int:
-            g = (home[m], keys[m][0])
-            v = cell_memo.get(g)
-            if v is None:
-                v = cell_memo[g] = comp_of(m)
-                parent.setdefault(v, v)
-            return v
-
-        def bc_node(m: int) -> int:
-            v = bc_memo.get(m)
-            if v is None:
-                v = bc_memo[m] = comp_of(m)
-                parent.setdefault(v, v)
-            return v
+        # 1. gather: each chained bucket's units as resolution tasks.
+        # Locally-core cores sharing one (shard, table-0 cell) are
+        # provably one inner component — the home forest chains every
+        # bucket it sees, and a table-0 bucket never spans shards — so
+        # their task key is the cell, collapsing the root walks to one
+        # per distinct cell.  Boundary cores are not locally chained and
+        # resolve per point (task key ("bc", m)).
+        tasks: Dict[Tuple, int] = {}  # task key -> point to resolve
+        groups: List[List[Tuple]] = []
+        reps_map = self._reps
+        for b in self.interesting:
+            ent = reps_map.get(b)
+            if ent is None or ent.units() < 2:
+                continue  # at most one component: nothing to chain
+            g: List[Tuple] = []
+            for shard, m in ent.lc_rep.items():
+                if m is None:
+                    m = self._lc_rep_of(b, shard)
+                cell = (home[m], keys[m][0])
+                tasks.setdefault(cell, m)
+                g.append(cell)
+            for m in ent.bc:
+                bc = ("bc", m)
+                tasks.setdefault(bc, m)
+                g.append(bc)
+            groups.append(g)
+        # 2. resolve every distinct representative's inner component
+        if comp_of_batch is None:
+            node = {tk: comp_of(m) for tk, m in tasks.items()}
+        else:
+            order = list(tasks)
+            vals = comp_of_batch([tasks[tk] for tk in order])
+            node = dict(zip(order, vals))
+        # 3. chain
+        parent: Dict[int, int] = {}
 
         def find(a: int) -> int:
             while parent[a] != a:
@@ -441,25 +460,11 @@ class BoundaryBridge:
                 a = parent[a]
             return a
 
-        reps_map = self._reps
-        for b in self.interesting:
-            ent = reps_map.get(b)
-            if ent is None or ent.units() < 2:
-                continue  # at most one component: nothing to chain
+        for g in groups:
             n0: Optional[int] = None
-            lc_rep = ent.lc_rep
-            for shard, m in lc_rep.items():
-                if m is None:
-                    m = self._lc_rep_of(b, shard)
-                v = lc_node(m)
-                if n0 is None:
-                    n0 = v
-                    continue
-                ra, rb = find(n0), find(v)
-                if ra != rb:
-                    parent[max(ra, rb)] = min(ra, rb)
-            for m in ent.bc:
-                v = bc_node(m)
+            for tk in g:
+                v = node[tk]
+                parent.setdefault(v, v)
                 if n0 is None:
                     n0 = v
                     continue
@@ -481,12 +486,15 @@ class BoundaryBridge:
         return node
 
     def resolve(self, idx: int, comp_of: Callable[[int], int],
-                anchored: bool) -> Optional[int]:
+                anchored: bool,
+                comp_of_batch: Optional[Callable] = None) -> Optional[int]:
         """Global component handle of live ``idx`` (None = noise) — the
         label() hot path.  ``comp_of`` is the inner engines' native find
         (Euler-tour ROOT, by global handle); ``anchored`` says whether the
-        home shard holds a local anchor for a non-core ``idx``."""
-        self._quotient(comp_of)
+        home shard holds a local anchor for a non-core ``idx``;
+        ``comp_of_batch`` (optional) lets a quotient rebuild resolve its
+        representatives in bulk (one round trip per remote shard)."""
+        self._quotient(comp_of, comp_of_batch)
         if self.support[idx] > 0 or anchored:
             return self._q_find(comp_of(idx))
         if self.attach_orphans:

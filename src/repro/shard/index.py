@@ -3,16 +3,31 @@
 Points are routed by :class:`ShardRouter` (hash of the table-0 key into
 contiguous key ranges) to one of ``cfg.shards`` inner indices, each any
 registered grid-bucket backend (``cfg.inner_backend``: ``dynamic``,
-``batched``, ``batched-device``, ``emz-static``).  Mutations fan out
-per-shard — ``insert_batch`` splits a run into per-shard sub-batches, so
-device backends keep their one-kernel-per-run hashing, and with
-``cfg.workers > 1`` the sub-batches run concurrently on a thread pool
-(each shard's engine is only ever touched by one worker at a time; the
-:class:`BoundaryBridge` is the single shared structure and is updated by
-the coordinating thread).  The bridge reconciles cross-shard structure so
-``labels()`` is the same global partition the single-shard inner backend
-computes (same cores and noise set; border-point ties — see bridge.py —
-may resolve to a different colliding cluster).
+``batched``, ``batched-device``, ``emz-static``).  *All* shard access
+goes through the wire protocol's :class:`~repro.service.ShardClient` —
+``cfg.transport`` selects how a shard is reached:
+
+  * ``"local"`` (default): the inner index lives in-process behind a
+    zero-copy client — the pre-protocol behavior and performance;
+  * ``"process"``: each shard is a spawned server process
+    (``repro.service.worker``) reached over a socket; the coordinator
+    routes on a table-0-only hash pass and the shards run the full
+    t-table hash *and* the pure-Python forest updates in their own
+    interpreters — true ~S× GIL-free update parallelism.  Insert
+    responses piggyback the bucket-key digest that feeds the
+    coordinator's bridge directory.
+
+Mutations fan out per-shard — ``insert_batch`` splits a run into
+per-shard sub-batches, so device backends keep their one-kernel-per-run
+hashing, and the sub-batches run concurrently on a thread pool
+(``cfg.workers > 1``, or always for ``transport="process"`` where the
+threads merely block on sockets; each shard is only ever touched by one
+worker at a time; the :class:`BoundaryBridge` is the single shared
+structure, lives on the coordinator, and is updated by the coordinating
+thread).  The bridge reconciles cross-shard structure so ``labels()`` is
+the same global partition the single-shard inner backend computes (same
+cores and noise set; border-point ties — see bridge.py — may resolve to
+a different colliding cluster) — bit-identical across transports.
 
 Query hot path: with ``cfg.incremental_merge`` (default) the bridge
 maintains its cross-shard union-find *under* the updates, so ``label()``
@@ -41,16 +56,15 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from ..api.backends import MIXED_KEY_BACKENDS
 from ..api.config import ClusterConfig
 from ..api.index import ClusterIndex
-from ..api.registry import build_index
 from ..core.dynamic_dbscan import NOISE, check_unique_ids
 from ..core.hashing import GridLSH
+from ..service.transport import ShardClient, connect_shards
 from .bridge import BoundaryBridge
 from .router import RebalancePlan, ShardRouter
 
-# inner engines whose local partitions are collision-graph refinements
-MIXED_KEY_BACKENDS = ("batched", "batched-device")
 UNSUPPORTED_INNER = ("naive", "emz-fixed", "sharded")
 
 PlanLike = Union[RebalancePlan, Tuple[int, int, int]]
@@ -65,10 +79,21 @@ class ShardedIndex(ClusterIndex):
                 "cross-shard merging needs a grid-bucket engine with "
                 "deletions (dynamic, batched, batched-device, emz-static)"
             )
-        self._inner_cfg = cfg.replace(backend=cfg.inner_backend)
-        self.inners: List[ClusterIndex] = [
-            build_index(self._inner_cfg) for _ in range(cfg.shards)
-        ]
+        # inner indices are always "local" from their own point of view —
+        # a worker process serves a plain in-process engine
+        self._inner_cfg = cfg.replace(backend=cfg.inner_backend,
+                                      transport="local")
+        self._process = cfg.transport == "process"
+        self.clients: List[ShardClient] = connect_shards(
+            self._inner_cfg, cfg.shards, cfg.transport)
+        try:
+            self._init_rest(cfg)
+        except Exception:
+            for c in self.clients:
+                c.close()
+            raise
+
+    def _init_rest(self, cfg: ClusterConfig) -> None:
         # one LSH family shared by router + bridge; identical to the inner
         # engines' (seeded from the same config), so directory keys match
         # inner bucket keys bit-for-bit
@@ -79,23 +104,48 @@ class ShardedIndex(ClusterIndex):
         self.router = ShardRouter(self.lsh, cfg.shards, seed=cfg.seed,
                                   mixed=self._mixed_keys)
         # the incremental merge resolves border points through the home
-        # shard's native anchor query; recompute inners can't answer it
+        # shard's native anchor query; recompute inners can't answer it —
+        # capability discovered through the protocol handshake, so it
+        # works identically for in-process and spawned shards
         self._incremental = bool(cfg.incremental_merge) and all(
-            inner.native_component_queries for inner in self.inners
+            c.hello().native_component_queries for c in self.clients
         )
         self.native_component_queries = self._incremental
         self.bridge = BoundaryBridge(cfg.t, cfg.k,
                                      attach_orphans=cfg.attach_orphans,
                                      incremental=self._incremental)
+        # thread-pool fan-out: opt-in via workers for local shards; always
+        # on for process shards (the threads only block on sockets, so the
+        # worker processes update truly in parallel).  workers=1 forces a
+        # serial fan-out on either transport.
+        n_workers = 0
+        if cfg.shards > 1:
+            if cfg.workers and cfg.workers > 1:
+                n_workers = min(int(cfg.workers), cfg.shards)
+            elif self._process and not cfg.workers:
+                n_workers = cfg.shards
         self._pool: Optional[ThreadPoolExecutor] = (
-            ThreadPoolExecutor(max_workers=min(int(cfg.workers), cfg.shards),
+            ThreadPoolExecutor(max_workers=n_workers,
                                thread_name_prefix="shard")
-            if cfg.workers and cfg.workers > 1 and cfg.shards > 1 else None
+            if n_workers else None
         )
         self._home: Dict[int, int] = {}  # idx -> shard
         self._next_idx = 0
         self._cache: Optional[Dict[int, int]] = None
         self._comp_fns: Optional[List[Callable[[int], int]]] = None
+
+    @property
+    def inners(self) -> List[ClusterIndex]:
+        """The in-process inner indices (local transport only; process
+        shards hold no Python reference — go through ``clients``)."""
+        return [c.index for c in self.clients]  # type: ignore[attr-defined]
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        for c in self.clients:
+            c.close()
 
     # ------------------------------------------------------------------ #
     # hashing (one vectorised pass per run, mirroring the inner key space)
@@ -123,6 +173,27 @@ class ShardedIndex(ClusterIndex):
 
     def _keys_batch(self, X: np.ndarray) -> List[List[bytes]]:
         return self._route_and_key(X)[1]
+
+    def _route_only(self, X: np.ndarray) -> np.ndarray:
+        """(n, d) -> (n,) target shards from a *table-0-only* hash pass.
+
+        The process-transport insert path: the coordinator pays one table
+        of hashing to route, and the full t-table pass happens shard-side
+        (in parallel, GIL-free), coming back as the response digest."""
+        if self._mixed_keys:
+            slots = self.router.slots_from_mixed(
+                self.lsh.device_keys_batch(X, tables=1)[:, 0, :])
+        else:
+            slots = self.router.slots_from_codes(
+                self.lsh.codes_batch(X, tables=1)[:, 0, :])
+        return self.router.assignment[slots]
+
+    @staticmethod
+    def _digest_keys(digest: np.ndarray, t: int) -> List[List[bytes]]:
+        """(m, t, w) response digest -> per-point bucket-key lists,
+        byte-identical to the coordinator's own hash pass."""
+        return [[digest[j, i].tobytes() for i in range(t)]
+                for j in range(digest.shape[0])]
 
     # ------------------------------------------------------------------ #
     # per-shard fan-out
@@ -171,17 +242,32 @@ class ShardedIndex(ClusterIndex):
         self._next_idx = nxt
         if n == 0:
             return out
-        shards, keys = self._route_and_key(X)
+        if self._process:
+            # route on table 0 only; the shards hash in parallel and the
+            # insert responses piggyback the bucket-key digest the bridge
+            # directory is fed from
+            shards = self._route_only(X)
+            keys: List[Optional[List[bytes]]] = [None] * n
+        else:
+            shards, keys = self._route_and_key(X)
         # fan out per shard, preserving in-shard stream order so batched
         # inners hash each sub-run in one kernel call
         jobs: Dict[int, Callable[[], Any]] = {}
+        by_shard: Dict[int, np.ndarray] = {}
         for s in range(self.cfg.shards):
             rows = np.flatnonzero(shards == s)
             if rows.size:
+                by_shard[s] = rows
                 jobs[s] = (lambda s=s, rows=rows:
-                           self.inners[s].insert_batch(
-                               X[rows], ids=[out[j] for j in rows]))
-        self._fanout(jobs)
+                           self.clients[s].insert_batch(
+                               X[rows], ids=[out[j] for j in rows],
+                               want_digest=self._process))
+        results = self._fanout(jobs)
+        if self._process:
+            for s, rows in by_shard.items():
+                sub = self._digest_keys(results[s][1], self.cfg.t)
+                for pos, j in enumerate(rows):
+                    keys[j] = sub[pos]
         for j in range(n):
             s = int(shards[j])
             self._home[out[j]] = s
@@ -193,7 +279,7 @@ class ShardedIndex(ClusterIndex):
         if idx not in self._home:
             raise KeyError(idx)
         s = self._home.pop(idx)
-        self.inners[s].delete(idx)
+        self.clients[s].delete_batch([idx])
         self.bridge.delete(idx, s)
         self._cache = None
 
@@ -206,7 +292,7 @@ class ShardedIndex(ClusterIndex):
         for i in ids:
             by_shard.setdefault(self._home[i], []).append(i)
         self._fanout({s: (lambda s=s, group=group:
-                          self.inners[s].delete_batch(group))
+                          self.clients[s].delete_batch(group))
                       for s, group in by_shard.items()})
         for s, group in by_shard.items():
             for i in group:
@@ -219,20 +305,46 @@ class ShardedIndex(ClusterIndex):
     # ------------------------------------------------------------------ #
     def _anchor_of(self, idx: int) -> Optional[int]:
         """Home shard's native core-anchor (inner half of the find)."""
-        return self.inners[self._home[idx]].core_anchor_of(idx)
+        return self.clients[self._home[idx]].core_anchor_of(idx)
 
     def _comp_of(self, idx: int) -> int:
         """Home shard's native component handle (Euler-tour ROOT)."""
         fns = self._comp_fns
         if fns is None:  # bind once; the quotient build is call-heavy
-            fns = self._comp_fns = [inner.component_of
-                                    for inner in self.inners]
+            # (LocalTransport binds these straight to the engine)
+            fns = self._comp_fns = [client.component_of
+                                    for client in self.clients]
         return fns[self._home[idx]](idx)
+
+    def _comp_of_batch(self, ids: Sequence[int]) -> List[Any]:
+        """Bulk native find, fanned out per home shard — the quotient
+        rebuild resolves all its representatives in one round trip per
+        shard (order-preserving; same values as per-point ``_comp_of``)."""
+        by_shard: Dict[int, List[int]] = {}
+        pos_of: Dict[int, List[int]] = {}
+        for pos, i in enumerate(ids):
+            s = self._home[i]
+            by_shard.setdefault(s, []).append(i)
+            pos_of.setdefault(s, []).append(pos)
+        res = self._fanout(
+            {s: (lambda s=s, grp=grp: self.clients[s].component_of_batch(grp))
+             for s, grp in by_shard.items()})
+        out: List[Any] = [None] * len(ids)
+        for s, positions in pos_of.items():
+            for pos, v in zip(positions, res[s]):
+                out[pos] = v
+        return out
+
+    @property
+    def _batch_resolver(self):
+        # per-point resolution is already zero-copy on the local
+        # transport; only remote shards benefit from batching
+        return self._comp_of_batch if self._process else None
 
     def _all_labels(self) -> Dict[int, int]:
         if self._cache is None:
             labs = self._fanout(
-                {s: (lambda s=s: self.inners[s].labels())
+                {s: (lambda s=s: self.clients[s].labels())
                  for s in range(self.cfg.shards)})
             self._cache = self.bridge.merge(
                 (labs[s] for s in sorted(labs)),
@@ -251,7 +363,8 @@ class ShardedIndex(ClusterIndex):
             return self._cache[idx]
         if self._incremental:
             r = self.bridge.resolve(idx, self._comp_of,
-                                    self._anchor_of(idx) is not None)
+                                    self._anchor_of(idx) is not None,
+                                    comp_of_batch=self._batch_resolver)
             return NOISE if r is None else r
         return self._all_labels()[idx]
 
@@ -280,8 +393,8 @@ class ShardedIndex(ClusterIndex):
         ``stats()['bridge_epoch']`` / re-query ``label`` for listed ids.
         Returns None when any inner engine does not track changes."""
         out = []
-        for inner in self.inners:
-            d = inner.drain_deltas()
+        for client in self.clients:
+            d = client.drain_deltas()
             if d is None:
                 return None
             out.extend(d)
@@ -302,10 +415,18 @@ class ShardedIndex(ClusterIndex):
     # ------------------------------------------------------------------ #
     # rebalancing: key-range live migration via snapshot replay
     # ------------------------------------------------------------------ #
+    def shard_sizes(self) -> List[int]:
+        """(S,) live point count per shard, from the coordinator's home
+        map (no shard round trips)."""
+        sizes = [0] * self.cfg.shards
+        for s in self._home.values():
+            sizes[s] += 1
+        return sizes
+
     def _shard_rows(self, s: int) -> Tuple[np.ndarray, np.ndarray]:
         """(ids, points) of shard ``s`` from its snapshot — every built-in
         backend's state exposes fixed-dtype ``ids``/``points`` arrays."""
-        state = self.inners[s].snapshot()["state"]
+        state = self.clients[s].snapshot_state()
         return (np.asarray(state["ids"], dtype=np.int64),
                 np.asarray(state["points"], dtype=np.float64))
 
@@ -332,8 +453,8 @@ class ShardedIndex(ClusterIndex):
                 if not take.any():
                     continue
                 movers = [int(i) for i in ids_s[take]]
-                self.inners[s].delete_batch(movers)
-                self.inners[p.target].insert_batch(X_s[take], ids=movers)
+                self.clients[s].delete_batch(movers)
+                self.clients[p.target].insert_batch(X_s[take], ids=movers)
                 for i in movers:
                     self.bridge.move(i, s, p.target)
                     self._home[i] = p.target
@@ -349,19 +470,19 @@ class ShardedIndex(ClusterIndex):
             "router": self.router.state(),
             "next_idx": np.asarray(self._next_idx, dtype=np.int64),
         }
-        for s, inner in enumerate(self.inners):
-            for key, arr in inner.snapshot()["state"].items():
+        for s, client in enumerate(self.clients):
+            for key, arr in client.snapshot_state().items():
                 state[f"shard{s:03d}/{key}"] = arr
         return state
 
     def _load_state(self, state: Dict[str, np.ndarray]) -> None:
         self.router.load_state(state["router"])
         self._next_idx = int(state["next_idx"])
-        for s, inner in enumerate(self.inners):
+        for s, client in enumerate(self.clients):
             prefix = f"shard{s:03d}/"
             sub = {key[len(prefix):]: arr for key, arr in state.items()
                    if key.startswith(prefix)}
-            inner.restore({"config": self._inner_cfg.to_dict(), "state": sub})
+            client.restore(self._inner_cfg.to_dict(), sub)
             ids_s, X_s = self._shard_rows(s)
             if ids_s.size:
                 keys = self._keys_batch(X_s)
@@ -374,23 +495,27 @@ class ShardedIndex(ClusterIndex):
     # diagnostics
     # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
-        for s, inner in enumerate(self.inners):
-            inner.check_invariants()
-            for i in inner.ids():
+        n_live = 0
+        for s, client in enumerate(self.clients):
+            client.check_invariants()
+            shard_ids = client.ids()
+            n_live += len(shard_ids)
+            for i in shard_ids:
                 assert self._home.get(i) == s, (i, s, self._home.get(i))
-        assert sum(len(inner) for inner in self.inners) == len(self._home)
+        assert n_live == len(self._home)
         self.bridge.check(self._home)
         if self._incremental and self._home:
             # the boundary-restricted labelling and the hot-path point
             # queries agree with the full-directory merge oracle
-            oracle = self.bridge.merge(inner.labels() for inner in self.inners)
+            oracle = self.bridge.merge(c.labels() for c in self.clients)
             self.bridge.n_merge_passes -= 1  # oracle pass, not serving
             assert self.labels() == oracle
             fwd: Dict[int, int] = {}
             rev: Dict[int, int] = {}
             for i in self.ids():
                 r = self.bridge.resolve(i, self._comp_of,
-                                        self._anchor_of(i) is not None)
+                                        self._anchor_of(i) is not None,
+                                        comp_of_batch=self._batch_resolver)
                 r = NOISE if r is None else r
                 assert (r == NOISE) == (oracle[i] == NOISE), (i, r, oracle[i])
                 if r != NOISE:  # handles <-> oracle labels bijectively
@@ -398,10 +523,11 @@ class ShardedIndex(ClusterIndex):
                     assert rev.setdefault(oracle[i], r) == r, i
 
     def stats(self) -> Dict[str, int]:
-        sizes = [len(inner) for inner in self.inners]
+        sizes = self.shard_sizes()
         out: Dict[str, int] = {
             "shards": self.cfg.shards,
             "workers": self.cfg.workers,
+            "process_transport": int(self._process),
             "incremental_merge": int(self._incremental),
             "n_boundary_buckets": self.bridge.n_boundary_buckets,
             "n_interesting_buckets": len(self.bridge.interesting),
@@ -412,8 +538,15 @@ class ShardedIndex(ClusterIndex):
             "bridge_epoch": self.bridge.epoch,
             "max_shard_points": max(sizes) if sizes else 0,
             "min_shard_points": min(sizes) if sizes else 0,
+            # wire counters: what the protocol cost, summed over shards
+            # (zero bytes on the local transport — nothing is encoded)
+            "transport_round_trips": sum(c.round_trips
+                                         for c in self.clients),
+            "transport_bytes_sent": sum(c.bytes_sent for c in self.clients),
+            "transport_bytes_received": sum(c.bytes_received
+                                            for c in self.clients),
         }
-        for inner in self.inners:
-            for key, v in inner.stats().items():
+        for client in self.clients:
+            for key, v in client.stats()[0].items():
                 out[key] = out.get(key, 0) + v
         return out

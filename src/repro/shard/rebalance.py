@@ -18,8 +18,9 @@ from .router import RebalancePlan
 
 
 def shard_loads(index) -> np.ndarray:
-    """(S,) live point count per shard."""
-    return np.asarray([len(inner) for inner in index.inners], dtype=np.int64)
+    """(S,) live point count per shard (coordinator-side home map — no
+    shard round trips, so it works on every transport)."""
+    return np.asarray(index.shard_sizes(), dtype=np.int64)
 
 
 def propose_rebalance(index, min_gap: int = 2) -> Optional[RebalancePlan]:

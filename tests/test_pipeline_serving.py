@@ -114,3 +114,36 @@ def test_request_clustering_groups_similar(cluster_shards):
                            max_new_tokens=2, embedding=emb))
     done = eng.run_until_drained(max_steps=400)
     assert len(done) == 8
+
+
+def test_request_dataclass_declares_engine_state_fields():
+    """_cidx/_next are declared optional fields (not ad-hoc dynamic
+    attributes), so dataclass introspection sees the full request."""
+    import dataclasses
+
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert {"_cidx", "_next"} <= names
+    r = Request(rid=0, prompt=np.array([1]))
+    assert r._cidx is None and r._next is None
+    assert dataclasses.asdict(r)["_cidx"] is None
+
+
+def test_request_window_is_a_deque():
+    """The admission window evicts at the head on every submit past
+    capacity — O(1) with a deque (the hot loop at high request rates)."""
+    from collections import deque
+
+    cfg = get_config("mamba2-780m").smoke()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(4))
+    eng = ServingEngine(model, params, batch=1, kv_len=16,
+                        cluster_requests=True, embed_dim=4)
+    assert isinstance(eng._req_window, deque)
+    rng = np.random.default_rng(5)
+    for rid in range(4 * eng.B + 3):  # overflow the window
+        eng.submit(Request(rid=rid, prompt=np.array([1, 2]),
+                           max_new_tokens=1, embedding=rng.normal(size=4)))
+    assert len(eng._req_window) == 4 * eng.B
+    assert len(eng.clusterer) == 4 * eng.B
+    eng.run_until_drained(max_steps=600)
+    eng.close()
