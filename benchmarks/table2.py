@@ -12,7 +12,6 @@ import argparse
 import json
 from pathlib import Path
 
-import numpy as np
 
 from repro.data import DATASET_SPECS, blobs, dataset_standin
 

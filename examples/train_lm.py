@@ -7,7 +7,6 @@ Defaults are CPU-feasible (~5M params); pass --full-100m on real hardware
 for the ~124M-param preset (12 layers x d_model 768, vocab 32k).
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

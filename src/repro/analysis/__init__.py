@@ -1,0 +1,31 @@
+"""repro.analysis — project-specific static analysis, wired into CI.
+
+    PYTHONPATH=src python -m repro.analysis [--json] [--select PASSES]
+
+Four passes guard the invariants the repo otherwise enforces only by
+convention (see each module's docstring for the rule tables):
+
+  * ``protocol-exhaustiveness`` — every ``repro.service`` message is
+    codec-registered, every ``*Req`` has a dispatch handler and a
+    resolvable ``*Resp``, every numpy payload declares a fixed dtype;
+  * ``hot-path-purity`` — ``repro/kernels`` stays vectorised (no Python
+    loops / host syncs in device code) and ``# hot-path``-marked
+    functions stay free of per-element numpy work;
+  * ``concurrency-guards`` — fan-out callables never mutate
+    coordinator-owned state (bridge/router/home map), and transport
+    error paths chain their raises;
+  * ``registry-conformance`` — every registered backend implements the
+    full ClusterIndex protocol with paired snapshot/restore and a
+    truthful ``native_component_queries`` capability flag.
+
+Suppress one finding with ``# analysis: allow[RULE]`` on (or directly
+above) the offending line; mark a serving hot path for checking with a
+``# hot-path`` comment on its ``def``.  New passes subclass
+:class:`~repro.analysis.base.AnalysisPass` and register with
+``@register_pass`` — the CLI and tests pick them up by name.
+"""
+
+from .base import PASSES, AnalysisPass, all_passes, register_pass  # noqa: F401
+from .cli import main, run_passes  # noqa: F401
+from .findings import Finding  # noqa: F401
+from .walker import Project, SourceFile  # noqa: F401

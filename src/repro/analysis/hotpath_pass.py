@@ -1,0 +1,132 @@
+"""hot-path purity — no Python loops or host syncs where speed lives.
+
+Two strictness tiers, matching how the repo splits its hot code:
+
+**Device scope** — every function in ``repro/kernels`` (the package is
+device code by policy: Pallas kernel bodies, their jitted wrappers, and
+the jnp oracles — the ROADMAP's roofline work depends on these staying
+vectorised).  Flagged:
+
+  HOT001  Python ``for``/``while`` (unrolls under trace; on-device work
+          must be expressed as array ops or kernel grids)
+  HOT002  host syncs: ``.item()``, ``float(x)``/``int(x)`` on non-literal
+          values (each one stalls the device pipeline)
+  HOT003  host-numpy calls (``np.*``) on traced values
+
+**Interpreted hot scope** — any function carrying a ``# hot-path``
+pragma (bridge resolution, the sharded ``label`` query, transport fast
+paths).  Python loops are the idiom there, so only per-element
+regressions are flagged:
+
+  HOT101  numpy array construction inside a loop (``np.asarray`` & co.
+          per element — the exact anti-pattern the vectorised batch
+          paths exist to avoid)
+  HOT102  ``.item()`` anywhere in the function
+  HOT103  non-empty dict/list/set literal or comprehension allocated
+          inside a loop (per-element container churn)
+
+Suppress a deliberate exception with ``# analysis: allow[HOT101]`` on
+the offending line.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import AnalysisPass, register_pass
+from .findings import Finding
+from .walker import Project, SourceFile, enclosing
+
+#: numpy constructors that materialise a fresh array on the host
+_NP_ALLOC = ("asarray", "array", "ascontiguousarray", "stack", "fromiter",
+             "frombuffer", "concatenate", "zeros", "ones", "empty", "full")
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _np_call(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+            and f.value.id in ("np", "numpy") and f.attr in _NP_ALLOC)
+
+
+def _in_loop(node: ast.AST, fn: ast.FunctionDef) -> bool:
+    loop = enclosing(node, ast.For, ast.While)
+    return loop is not None and enclosing(loop, ast.FunctionDef) is fn
+
+
+@register_pass
+class HotPathPurity(AnalysisPass):
+    name = "hot-path-purity"
+    description = ("kernels stay vectorised; # hot-path functions stay "
+                   "free of per-element numpy work")
+
+    def __init__(self, device_prefix: str = "kernels/"):
+        super().__init__()
+        self._device_prefix = device_prefix
+
+    def run(self, project: Project) -> List[Finding]:
+        for sf in project.sources():
+            device_file = sf.rel.startswith(self._device_prefix)
+            for fn in sf.functions():
+                if device_file:
+                    self._check_device(sf, fn)
+                elif sf.is_hot_path(fn):
+                    self._check_interpreted(sf, fn)
+        return self.findings
+
+    # ------------------------------------------------------------------ #
+    def _check_device(self, sf: SourceFile, fn: ast.FunctionDef) -> None:
+        where = f"device function {fn.name!r}"
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.While)):
+                self.emit(sf, node.lineno, "HOT001",
+                          f"Python loop in {where} — express as array ops "
+                          "or a kernel grid dimension")
+            elif isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name == "item":
+                    self.emit(sf, node.lineno, "HOT002",
+                              f".item() in {where} forces a host sync")
+                elif (name in ("float", "int")
+                      and isinstance(node.func, ast.Name) and node.args
+                      and not isinstance(node.args[0], ast.Constant)):
+                    self.emit(sf, node.lineno, "HOT002",
+                              f"{name}() on a traced value in {where} "
+                              "forces a host sync")
+                elif _np_call(node):
+                    self.emit(sf, node.lineno, "HOT003",
+                              f"host-numpy call np.{node.func.attr} in "
+                              f"{where} — use jnp inside device code")
+
+    def _check_interpreted(self, sf: SourceFile, fn: ast.FunctionDef) -> None:
+        where = f"hot-path function {fn.name!r}"
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if _np_call(node) and _in_loop(node, fn):
+                    self.emit(sf, node.lineno, "HOT101",
+                              f"per-element np.{node.func.attr} inside a "
+                              f"loop in {where} — hoist to one batch pass")
+                elif _call_name(node) == "item":
+                    self.emit(sf, node.lineno, "HOT102",
+                              f".item() in {where} forces a device sync "
+                              "per element")
+            elif (isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp))
+                  and _in_loop(node, fn)):
+                self.emit(sf, node.lineno, "HOT103",
+                          f"comprehension allocated inside a loop in "
+                          f"{where} — per-element container churn")
+            elif isinstance(node, (ast.List, ast.Set, ast.Dict)):
+                items = node.keys if isinstance(node, ast.Dict) else node.elts
+                if items and _in_loop(node, fn):
+                    self.emit(sf, node.lineno, "HOT103",
+                              f"non-empty container literal inside a loop "
+                              f"in {where} — per-element allocation")

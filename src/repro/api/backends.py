@@ -19,12 +19,12 @@ protocol when queried once per batch).
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from ..core.batched import BatchedDynamicDBSCAN
-from ..core.dynamic_dbscan import NOISE, DynamicDBSCAN, claim_index
+from ..core.dynamic_dbscan import DynamicDBSCAN, claim_index
 from ..core.fixed_core import EMZFixedCore
 from ..core.hashing import GridLSH
 from ..core.static_emz import emz_cluster
@@ -50,22 +50,22 @@ class EulerTourIndex(ClusterIndex):
         # calls it thousands of times per epoch, so adapter hops count
         self.component_of = engine.get_cluster
 
-    def insert(self, x, idx=None):
+    def insert(self, x: np.ndarray, idx: Optional[int] = None) -> int:
         return self.engine.add_point(x, idx=idx)
 
-    def delete(self, idx):
+    def delete(self, idx: int) -> None:
         self.engine.delete_point(idx)
 
-    def insert_batch(self, X, ids=None):
+    def insert_batch(self, X, ids=None) -> List[int]:
         X = np.asarray(X, dtype=np.float64)
         if isinstance(self.engine, BatchedDynamicDBSCAN):
             return self.engine.add_batch(X, ids=ids)
         return super().insert_batch(X, ids=ids)
 
-    def label(self, idx):
+    def label(self, idx: int) -> int:  # hot-path
         return self.engine.get_cluster(idx)
 
-    def labels(self, ids=None):
+    def labels(self, ids=None) -> Dict[int, int]:
         return self.engine.labels(ids)
 
     def core_anchor_of(self, idx):

@@ -35,7 +35,7 @@ class ClusterConfig:
     #                              server process per shard, wire protocol
     #                              over sockets; GIL-free update fan-out)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         # Validate at construction with named messages instead of failing
         # deep inside GridLSH.__init__ / the engine constructors.
         if self.d < 1:

@@ -31,13 +31,13 @@ from .events import Delete, Insert
 
 
 class ClusterIndex(abc.ABC):
-    NOISE = NOISE
+    NOISE: int = NOISE
 
     #: True when the backend answers :meth:`component_of` /
     #: :meth:`core_anchor_of` from maintained structure (no recompute) —
     #: the capability the sharded incremental merge path requires of its
     #: inner engines.
-    native_component_queries = False
+    native_component_queries: bool = False
 
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
@@ -90,7 +90,7 @@ class ClusterIndex(abc.ABC):
         run_ids: List[Optional[int]] = []
         run_del: List[int] = []
 
-        def flush():
+        def flush() -> None:
             if run_x:
                 out.extend(self.insert_batch(np.stack(run_x), ids=run_ids))
                 run_x.clear()
@@ -203,7 +203,7 @@ class ClusterIndex(abc.ABC):
     def __enter__(self) -> "ClusterIndex":
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: Any) -> None:
         self.close()
 
     # ---------------------------------------------------------------- #

@@ -16,10 +16,13 @@ from typing import Any, Callable, Dict, Tuple, Union
 from .config import ClusterConfig
 from .index import ClusterIndex
 
-_REGISTRY: Dict[str, Callable[[ClusterConfig], ClusterIndex]] = {}
+Factory = Callable[[ClusterConfig], ClusterIndex]
+
+_REGISTRY: Dict[str, Factory] = {}
 
 
-def register_backend(name: str, overwrite: bool = False):
+def register_backend(name: str,
+                     overwrite: bool = False) -> Callable[[Factory], Factory]:
     """Decorator registering a ``cfg -> ClusterIndex`` factory under ``name``.
 
     Re-registering an existing name raises unless ``overwrite=True`` —
@@ -27,7 +30,7 @@ def register_backend(name: str, overwrite: bool = False):
     ``overwrite=True`` / :func:`unregister_backend` to swap factories.
     """
 
-    def deco(factory: Callable[[ClusterConfig], ClusterIndex]):
+    def deco(factory: Factory) -> Factory:
         if name in _REGISTRY and not overwrite:
             raise ValueError(
                 f"backend {name!r} already registered "

@@ -27,7 +27,7 @@ tour):
 
 from __future__ import annotations
 
-from typing import Dict, Hashable, Iterator, Optional, Set, Tuple
+from typing import Dict, Hashable, Iterator, Set, Tuple
 
 from .skiplist import SkipListSeq, SLNode
 
@@ -142,7 +142,8 @@ class EulerTourForest:
         n2 = self._next0(e2)
         self._split_before(e1)
         self._sl.split_after(e1)  # isolates ... wait: [e1 .. e2 .. C]
-        # after split_before(e1): A | [e1..e2..C]; split_after(e1): A | [e1] | B' where B' = B ++ [e2] ++ C
+        # after split_before(e1): A | [e1..e2..C];
+        # split_after(e1): A | [e1] | B' where B' = B ++ [e2] ++ C
         self._split_before(e2)  # B' → B | [e2 ..C]
         self._sl.split_after(e2)  # → [e2] | C
         # tree 1: B (nonempty: contains at least loop of the far endpoint)

@@ -15,7 +15,7 @@ equivalence test we follow the dynamic paper's definition here too.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 import scipy.sparse as sp

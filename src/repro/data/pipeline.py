@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -1,1 +1,5 @@
-from .compression import int8_compress_decompress, make_compressed_grad_transform, topk_compress_decompress  # noqa: F401
+from .compression import (  # noqa: F401
+    int8_compress_decompress,
+    make_compressed_grad_transform,
+    topk_compress_decompress,
+)

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import os
 
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import lsh_hash as _lh

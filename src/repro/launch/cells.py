@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs import ArchConfig, ShapeConfig, get_config, get_shape
-from ..models import encdec as ED
 from ..models.registry import ModelAPI, build_model
 from ..optim import AdamW, warmup_cosine
 from ..sharding import logical_to_spec, spec_tree

@@ -25,7 +25,6 @@ All sizes are PER DEVICE (the HLO is the SPMD-partitioned module).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -23,7 +23,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import ARCH_IDS, get_config
@@ -31,7 +30,6 @@ from ..data.pipeline import CurationFilter, Pipeline, SyntheticTokenStream
 from ..models.registry import build_model
 from ..optim import AdamW, warmup_cosine
 from ..runtime import HeartbeatRegistry, StragglerDetector
-from ..sharding import spec_tree
 from ..training import make_train_step
 from .mesh import make_host_mesh
 
@@ -72,7 +70,9 @@ def main(argv=None):
         )
     model = build_model(cfg)
     mesh = make_host_mesh()
-    print(f"arch={cfg.name} params≈{cfg.n_params()/1e6:.1f}M mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    print(f"arch={cfg.name} params≈{cfg.n_params()/1e6:.1f}M "
+          f"mesh={mesh_shape}")
 
     params, axes = model.init(jax.random.PRNGKey(0))
     opt = AdamW(lr=warmup_cosine(args.lr, 20, max(args.steps, 100)))

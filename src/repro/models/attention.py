@@ -10,7 +10,6 @@ lowers to small all-reduces under GSPMD (DESIGN.md §4).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -14,7 +14,6 @@ a ``seq_len`` self-attention cache plus a fixed 1500-frame cross cache.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,8 @@ def _init_dec_layer(key, cfg, dtype):
     p["self"], a["self"] = A.init_attention(ks[0], cfg, dtype)
     p["ln_self"], a["ln_self"] = L.declare(ks[1], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
     p["cross"], a["cross"] = _init_cross_attention(ks[2], cfg, dtype)
-    p["ln_cross"], a["ln_cross"] = L.declare(ks[3], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
+    p["ln_cross"], a["ln_cross"] = L.declare(
+        ks[3], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
     p["mlp"], a["mlp"] = L.init_gelu_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype)
     p["ln_mlp"], a["ln_mlp"] = L.declare(ks[5], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
     return p, a
@@ -79,8 +79,10 @@ def init_encdec(cfg, key):
         lambda k: _init_enc_layer(k, cfg, dtype), ks[2], cfg.n_encoder_layers)
     params["dec_layers"], axes["dec_layers"] = L.stack_layers(
         lambda k: _init_dec_layer(k, cfg, dtype), ks[3], cfg.n_layers)
-    params["ln_enc"], axes["ln_enc"] = L.declare(ks[4], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
-    params["ln_f"], axes["ln_f"] = L.declare(ks[4], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
+    params["ln_enc"], axes["ln_enc"] = L.declare(
+        ks[4], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
+    params["ln_f"], axes["ln_f"] = L.declare(
+        ks[4], {"w": ((cfg.d_model,), ("embed_r",), 0.0)}, dtype)
     params["head"], axes["head"] = L.init_lm_head(ks[5], cfg.d_model, cfg.padded_vocab, dtype)
     return params, axes
 

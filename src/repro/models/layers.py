@@ -9,7 +9,7 @@ PartitionSpecs.  Layer stacks are built by vmapping init over a leading
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

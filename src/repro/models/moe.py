@@ -16,7 +16,6 @@ the trainer.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

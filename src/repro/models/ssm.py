@@ -14,7 +14,6 @@ recurrence in ``ssd_ref`` is the test oracle.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

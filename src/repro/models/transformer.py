@@ -14,8 +14,7 @@ axis (small all-reduces under GSPMD).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -36,18 +36,31 @@ MAX_FRAME = 1 << 40  # sanity bound: a corrupt length prefix fails fast
 # ---------------------------------------------------------------------- #
 # message <-> npz payload
 # ---------------------------------------------------------------------- #
+def _wire_array(owner: str, name: str, arr: np.ndarray) -> np.ndarray:
+    """Refuse object/void arrays at encode time: decode runs with
+    ``allow_pickle=False``, so letting one through here would serialise
+    fine locally and explode on the *peer* — fail on the sender instead."""
+    if arr.dtype.kind in ("O", "V"):
+        raise TypeError(
+            f"{owner}.{name} has non-fixed dtype {arr.dtype!r}; "
+            "object arrays cannot cross the wire unpickled")
+    return arr
+
+
 def encode(msg: Message) -> bytes:
     meta: Dict[str, object] = {"kind": msg.kind}
     arrays: Dict[str, np.ndarray] = {}
+    owner = type(msg).__name__
     for f in dataclasses.fields(msg):
         v = getattr(msg, f.name)
         if v is None:
             continue
         if f.name in msg._array_dicts:
             for key, arr in v.items():
-                arrays[f"d:{f.name}/{key}"] = np.asarray(arr)
+                arrays[f"d:{f.name}/{key}"] = _wire_array(
+                    owner, f"{f.name}[{key!r}]", np.asarray(arr))
         elif isinstance(v, np.ndarray):
-            arrays[f"a:{f.name}"] = v
+            arrays[f"a:{f.name}"] = _wire_array(owner, f.name, v)
         else:
             meta[f.name] = v
     arrays["__meta__"] = np.frombuffer(

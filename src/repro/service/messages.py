@@ -55,15 +55,29 @@ class Message:
     kind: ClassVar[str] = ""
     #: field -> required numpy dtype (coerced in __post_init__)
     _dtypes: ClassVar[Dict[str, Any]] = {}
+    #: field -> tuple of permitted fixed dtypes, for payloads whose width
+    #: legitimately varies by engine family (e.g. the insert digest:
+    #: int64 exact grid codes vs int32 device-hash mixed keys) — the
+    #: array must already be one of them; never coerced, never object
+    _poly_dtypes: ClassVar[Dict[str, Tuple[Any, ...]]] = {}
     #: fields holding {str: ndarray} payloads (snapshot state)
     _array_dicts: ClassVar[Tuple[str, ...]] = ()
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         for name, dtype in self._dtypes.items():
             v = getattr(self, name)
             if v is not None:
                 object.__setattr__(
                     self, name, np.ascontiguousarray(v, dtype=dtype))
+        for name, allowed in self._poly_dtypes.items():
+            v = getattr(self, name)
+            if v is not None:
+                v = np.ascontiguousarray(v)
+                if v.dtype not in tuple(np.dtype(a) for a in allowed):
+                    raise TypeError(
+                        f"{type(self).__name__}.{name} dtype {v.dtype} not "
+                        f"in {tuple(np.dtype(a).name for a in allowed)}")
+                object.__setattr__(self, name, v)
 
 
 # ---------------------------------------------------------------------- #
@@ -84,6 +98,8 @@ class InsertBatchReq(Message):
 class InsertBatchResp(Message):
     kind = "insert_batch_resp"
     _dtypes = {"ids": np.int64}
+    # int64 = exact grid codes, int32 = device-hash mixed keys
+    _poly_dtypes = {"digest": (np.int64, np.int32)}
     ids: np.ndarray                       # (n,) assigned handles
     digest: Optional[np.ndarray] = None   # (n, t, w) bucket-key digest
     n_live: int = 0
@@ -139,7 +155,7 @@ class ComponentOfBatchReq(Message):
 
     kind = "component_of_batch"
     _dtypes = {"ids": np.int64}
-    ids: np.ndarray = None
+    ids: Optional[np.ndarray] = None
 
 
 @register_message
@@ -277,7 +293,7 @@ class ErrorResp(Message):
 # strs/ints, e.g. ("edge", u, v)).  JSON turns tuples into lists, so the
 # client re-tuples on decode — both transports then return the exact same
 # handle values (the oracle-equivalence contract).
-def encode_handle(v):
+def encode_handle(v: Any) -> Any:
     if v is None or isinstance(v, (int, np.integer)):
         return None if v is None else int(v)
     if isinstance(v, (tuple, list)):
@@ -285,7 +301,7 @@ def encode_handle(v):
     raise TypeError(f"component handle {v!r} is not wire-encodable")
 
 
-def decode_handle(v):
+def decode_handle(v: Any) -> Any:
     return tuple(v) if isinstance(v, list) else v
 
 

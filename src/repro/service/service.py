@@ -70,7 +70,8 @@ class ClusterService:
         try:
             fn = self._dispatch[type(req)]
         except KeyError:
-            raise TypeError(f"unhandled request {type(req).__name__}")
+            raise TypeError(
+                f"unhandled request {type(req).__name__}") from None
         return fn(req)
 
     def digest(self, X: np.ndarray) -> np.ndarray:
@@ -117,6 +118,7 @@ class ClusterService:
         return m.ValueResp(
             value=m.encode_handle(self.index.component_of(req.idx)))
 
+    # hot-path
     def _component_of_batch(self, req: m.ComponentOfBatchReq) -> m.ValuesResp:
         comp = self.index.component_of  # bound once: the hot dispatch
         return m.ValuesResp(

@@ -145,7 +145,7 @@ class LocalTransport(ShardClient):
         self.component_of = self.index.component_of
         self.core_anchor_of = self.index.core_anchor_of
 
-    def component_of_batch(self, ids):
+    def component_of_batch(self, ids):  # hot-path
         comp = self.index.component_of
         return [comp(int(i)) for i in ids]
 
@@ -219,7 +219,7 @@ class ProcessTransport(ShardClient):
             detail = f"worker exited with code {code} ({detail})"
         return ShardUnavailableError(self.shard_id, detail)
 
-    def request(self, req: m.Message) -> m.Message:
+    def request(self, req: m.Message) -> m.Message:  # hot-path
         if self._sock is None:
             raise ShardUnavailableError(self.shard_id, "transport closed")
         try:

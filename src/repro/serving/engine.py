@@ -17,8 +17,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
-from typing import Any, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

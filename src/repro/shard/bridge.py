@@ -395,6 +395,7 @@ class BoundaryBridge:
     # ------------------------------------------------------------------ #
     # incremental queries: inner-find -> bridge-find over the boundary
     # ------------------------------------------------------------------ #
+    # hot-path
     def _quotient(self, comp_of: Callable[[int], int],
                   comp_of_batch: Optional[Callable] = None) -> Dict[int, int]:
         """The epoch's quotient union-find over inner component handles:
@@ -476,7 +477,7 @@ class BoundaryBridge:
         self.n_quotient_builds += 1
         return parent
 
-    def _q_find(self, node: int) -> int:
+    def _q_find(self, node: int) -> int:  # hot-path
         parent = self._q_parent
         if node not in parent:
             return node  # component untouched by any interesting bucket
@@ -485,6 +486,7 @@ class BoundaryBridge:
             node = parent[node]
         return node
 
+    # hot-path
     def resolve(self, idx: int, comp_of: Callable[[int], int],
                 anchored: bool,
                 comp_of_batch: Optional[Callable] = None) -> Optional[int]:

@@ -307,7 +307,7 @@ class ShardedIndex(ClusterIndex):
         """Home shard's native core-anchor (inner half of the find)."""
         return self.clients[self._home[idx]].core_anchor_of(idx)
 
-    def _comp_of(self, idx: int) -> int:
+    def _comp_of(self, idx: int) -> int:  # hot-path
         """Home shard's native component handle (Euler-tour ROOT)."""
         fns = self._comp_fns
         if fns is None:  # bind once; the quotient build is call-heavy
@@ -351,7 +351,7 @@ class ShardedIndex(ClusterIndex):
                 boundary_only=self._incremental)
         return self._cache
 
-    def label(self, idx: int) -> int:
+    def label(self, idx: int) -> int:  # hot-path
         """Point query.  On the incremental path this is the hot-path
         resolution — inner-find (Euler-tour ROOT on the home shard) ->
         bridge-find (quotient over the maintained boundary-bucket set) —

@@ -17,7 +17,7 @@ Parallelism map (mesh axes ``pod``, ``data``, ``model``):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -10,7 +10,6 @@ between accumulation and the optimizer update.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax

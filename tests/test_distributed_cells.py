@@ -3,7 +3,6 @@
 count must be set before jax initialises (the main test process keeps 1
 device, as required)."""
 
-import json
 import subprocess
 import sys
 from pathlib import Path
@@ -35,7 +34,8 @@ def run(arch, shape_kind, execute=False):
         shape = ShapeConfig("p", 64, 4, "prefill")
     else:
         shape = ShapeConfig("d", 64, 8, "decode")
-    cell = build_cell(arch, shape.name, mesh, cfg=cfg, shape=shape, grad_accum=2 if shape_kind == "train" else None)
+    cell = build_cell(arch, shape.name, mesh, cfg=cfg, shape=shape,
+                      grad_accum=2 if shape_kind == "train" else None)
     lowered = cell.lower()
     compiled = lowered.compile()
     rec = analyze_compiled(compiled)

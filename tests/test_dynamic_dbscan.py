@@ -12,7 +12,6 @@ import pytest
 
 from repro.core import (
     DynamicDBSCAN,
-    EMZRecompute,
     GridLSH,
     NOISE,
     adjusted_rand_index,

@@ -3,7 +3,6 @@ collective byte accounting — the foundation of the roofline numbers."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze, parse_hlo

@@ -16,7 +16,6 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
 from repro.core import DynamicDBSCAN, GridLSH, NOISE, emz_cluster
-from repro.core.skiplist import SkipListSeq
 
 
 def _apply_ops(dyn, ops):

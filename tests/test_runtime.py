@@ -4,7 +4,6 @@ checkpoint save/restore (+async, atomic, reshard), gradient compression."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.distributed import (
@@ -12,7 +11,7 @@ from repro.distributed import (
     make_compressed_grad_transform,
     topk_compress_decompress,
 )
-from repro.runtime import ElasticPlan, HeartbeatRegistry, StragglerDetector, plan_remesh
+from repro.runtime import HeartbeatRegistry, StragglerDetector, plan_remesh
 
 
 # --------------------------------------------------------------------- #

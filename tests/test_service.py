@@ -27,7 +27,6 @@ from repro.service import (
     LabelsReq,
     LabelsResp,
     LocalTransport,
-    ProcessTransport,
     RestoreReq,
     ShardUnavailableError,
     SnapshotReq,

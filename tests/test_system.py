@@ -6,7 +6,6 @@ tracking, train-loop convergence with checkpoint restart, and the
 level-set recovery sanity check (Thm 3)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (
     DynamicDBSCAN, EMZFixedCore, EMZRecompute, GridLSH,
