@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.api import ClusterConfig, build_index
 from repro.data import blobs
+from repro.obs import histogram_summary, merge_snapshots, write_chrome
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 K, T, EPS = 10, 10, 0.75
@@ -41,10 +42,12 @@ def _pct(xs, q):
 
 def run_one(shards: int, workers: int, incremental: bool, *, n: int,
             batch: int, rounds: int, queries: int, inner: str = "batched",
-            transport: str = "local", seed: int = 0) -> dict:
+            transport: str = "local", seed: int = 0, obs: bool = False,
+            trace_out=None) -> dict:
     X, _ = blobs(n=n + batch * (rounds + 1), d=10, n_clusters=10, seed=seed)
     cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed,
-                        workers=workers, incremental_merge=incremental)
+                        workers=workers, incremental_merge=incremental,
+                        obs=obs)
     cfg = (cfg.replace(backend=inner) if shards <= 1 else
            cfg.replace(backend="sharded", shards=shards, inner_backend=inner,
                        transport=transport))
@@ -89,8 +92,24 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
     t_labels = time.perf_counter() - t0
     stats = index.stats()
     live_points = len(index)
+    obs_row = None
+    if obs and index.obs.enabled:
+        # structural gauges refresh at snapshot time; the histograms the
+        # workload already filled (per-op + per-shard RPC latency) ride
+        # into the result row so a regression diff says *where* time went
+        if hasattr(index, "obs_refresh"):
+            index.obs_refresh()
+        snaps = (index.obs_snapshot() if hasattr(index, "obs_snapshot")
+                 else [index.obs.snapshot()])
+        merged = merge_snapshots(snaps)
+        obs_row = {"histograms": histogram_summary(merged["metrics"]),
+                   "n_spans": len(merged["spans"]),
+                   "spans_dropped": merged["spans_dropped"]}
+        if trace_out is not None:
+            write_chrome(trace_out, merged["spans"])
+            print(f"  trace: {len(merged['spans'])} spans -> {trace_out}")
     index.close()
-    return {
+    row = {
         "shards": shards,
         "workers": workers,
         "incremental": bool(incremental),
@@ -112,11 +131,15 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
         "transport_bytes_sent": stats.get("transport_bytes_sent", 0),
         "transport_bytes_received": stats.get("transport_bytes_received", 0),
     }
+    if obs_row is not None:
+        row["obs"] = obs_row
+    return row
 
 
 def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
         rounds: int = 4, queries: int = 16, inner: str = "batched",
-        transport: str = "local", seed: int = 0) -> list:
+        transport: str = "local", seed: int = 0, obs: bool = False,
+        trace_out=None) -> list:
     """Full sweep: every shard count with the serial/threaded fan-out and
     the incremental merge on/off (off only where it changes anything:
     S > 1).  ``transport="process"`` runs the sharded rows out-of-process
@@ -127,9 +150,15 @@ def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
         for W in (workers if S > 1 else (0,)):
             incs = (True,) if S <= 1 or transport == "process" else (True, False)
             for inc in incs:
+                # the trace artifact captures the largest sharded traced
+                # row (distinct rows would just overwrite each other)
+                dump = (trace_out if obs and trace_out is not None
+                        and S == max(shards) and W == max(workers) and inc
+                        else None)
                 r = run_one(S, W, inc, n=n, batch=batch, rounds=rounds,
                             queries=queries, inner=inner,
-                            transport=transport, seed=seed)
+                            transport=transport, seed=seed, obs=obs,
+                            trace_out=dump)
                 rows.append(r)
                 print(f"S={S} workers={W} incremental={str(inc):5s} "
                       f"transport={r['transport']:7s}  "
@@ -165,16 +194,26 @@ def main(argv=None):
                     choices=("local", "process"),
                     help="run the sharded rows through in-process shards "
                          "or spawned per-shard server processes")
+    ap.add_argument("--obs", action="store_true",
+                    help="instrument the runs (repro.obs): per-op latency "
+                         "histograms land in each result row")
+    ap.add_argument("--trace-out", type=Path, default=None, metavar="PATH",
+                    help="with --obs: write the largest sharded row's "
+                         "Chrome trace-event dump here")
     args = ap.parse_args(argv)
+    if args.trace_out is not None and not args.obs:
+        ap.error("--trace-out needs --obs")
     if args.smoke:
         run(shards=tuple(args.shards or (1, 2)),
             workers=tuple(args.workers or (0, 2)),
             n=args.n or 1200, batch=100, rounds=3, queries=8,
-            inner=args.inner, transport=args.transport)
+            inner=args.inner, transport=args.transport,
+            obs=args.obs, trace_out=args.trace_out)
     else:
         run(shards=tuple(args.shards or (1, 4, 8)),
             workers=tuple(args.workers or (0, 4)),
-            n=args.n or 16000, inner=args.inner, transport=args.transport)
+            n=args.n or 16000, inner=args.inner, transport=args.transport,
+            obs=args.obs, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

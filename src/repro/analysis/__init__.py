@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.analysis [--json] [--select PASSES]
 
-Four passes guard the invariants the repo otherwise enforces only by
+Five passes guard the invariants the repo otherwise enforces only by
 convention (see each module's docstring for the rule tables):
 
   * ``protocol-exhaustiveness`` — every ``repro.service`` message is
@@ -16,7 +16,10 @@ convention (see each module's docstring for the rule tables):
     error paths chain their raises;
   * ``registry-conformance`` — every registered backend implements the
     full ClusterIndex protocol with paired snapshot/restore and a
-    truthful ``native_component_queries`` capability flag.
+    truthful ``native_component_queries`` capability flag;
+  * ``obs-discipline`` — span/timer instruments in ``service/`` and
+    ``shard/`` are opened as context managers, so a span can't leak
+    open on an exception path.
 
 Suppress one finding with ``# analysis: allow[RULE]`` on (or directly
 above) the offending line; mark a serving hot path for checking with a

@@ -46,6 +46,9 @@ class EulerTourIndex(ClusterIndex):
     def __init__(self, cfg: ClusterConfig, engine: DynamicDBSCAN):
         super().__init__(cfg)
         self.engine = engine
+        # hand the engine this index's obs handle so structural telemetry
+        # (repair depth) lands in the same registry as the adapter's ops
+        engine.obs = self.obs
         # bind the native point query directly: the sharded quotient build
         # calls it thousands of times per epoch, so adapter hops count
         self.component_of = engine.get_cluster

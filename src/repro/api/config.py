@@ -34,6 +34,10 @@ class ClusterConfig:
     #                              zero-copy) or "process" (one spawned
     #                              server process per shard, wire protocol
     #                              over sockets; GIL-free update fan-out)
+    obs: bool = False            # observability: metrics registry + trace
+    #                              spans (repro.obs).  Off by default; the
+    #                              null instruments keep un-instrumented
+    #                              runs and wire bytes bit-identical.
 
     def __post_init__(self) -> None:
         # Validate at construction with named messages instead of failing

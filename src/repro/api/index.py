@@ -26,6 +26,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.dynamic_dbscan import NOISE, check_unique_ids
+from ..obs import make_obs
 from .config import ClusterConfig
 from .events import Delete, Insert
 
@@ -41,6 +42,9 @@ class ClusterIndex(abc.ABC):
 
     def __init__(self, cfg: ClusterConfig):
         self.cfg = cfg
+        #: per-index observability handle; the shared no-op NULL_OBS
+        #: unless ``cfg.obs`` is set (see repro.obs).
+        self.obs = make_obs(cfg.obs)
 
     # ---------------------------------------------------------------- #
     # mutations

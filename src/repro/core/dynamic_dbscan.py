@@ -23,6 +23,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..obs import NULL_OBS
 from .buckets import BucketIndex
 from .euler_tour import EulerTourForest
 from .hashing import GridLSH
@@ -136,6 +137,9 @@ class DynamicDBSCAN:
         # instrumentation: how often the replacement-edge repair fires
         self.n_repair_scans = 0
         self.n_repair_links = 0
+        # observability handle; rebound by the owning adapter when the
+        # config's obs knob is on (class default: shared no-op)
+        self.obs = NULL_OBS
 
     # ------------------------------------------------------------------ #
     # public API (paper's procedures)
@@ -480,6 +484,11 @@ class DynamicDBSCAN:
                 except StopIteration:
                     active.discard(r)
         snapshots = [collected[r] for r in comps if r not in active]
+        if self.obs.enabled:
+            # repair depth: nodes collected off the smaller sides — the
+            # per-delete cost the paper bounds by the splits' small halves
+            self.obs.histogram("engine.repair_nodes").observe(
+                sum(len(snap) for snap in snapshots))
         for snap in snapshots:
             for w in snap:
                 if self.support.get(w, 0) == 0:

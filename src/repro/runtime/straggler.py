@@ -45,3 +45,23 @@ class StragglerDetector:
 
     def ewma(self, host_id: int) -> float:
         return self._ewma[host_id]
+
+    def record_from_obs(self, metrics: Dict[str, dict],
+                        prefix: str = "rpc.shard",
+                        scale: float = 1e-6) -> List[int]:
+        """Feed one observation round from serving telemetry: the
+        per-shard RPC latency histograms of an ``Obs`` metrics snapshot
+        (``rpc.shard<N>_us`` entries, as recorded by the sharded
+        coordinator's fan-out) instead of synthetic probes.  Each shard's
+        p50 (µs, scaled to seconds) becomes that host's step-time sample;
+        breach counters update when at least one host was fed.  Returns
+        the hosts fed this round."""
+        fed: List[int] = []
+        for h in self._ewma:
+            m = metrics.get(f"{prefix}{h}_us")
+            if m and m.get("type") == "histogram" and m.get("count"):
+                self.record(h, float(m["p50"]) * scale)
+                fed.append(h)
+        if fed:
+            self.update_breaches()
+        return fed

@@ -63,6 +63,12 @@ def encode(msg: Message) -> bytes:
             arrays[f"a:{f.name}"] = _wire_array(owner, f.name, v)
         else:
             meta[f.name] = v
+    # observability sidecar: reserved header keys, present only when the
+    # message was traced — absent, the bytes match the un-instrumented tree
+    if msg.trace_ctx is not None:
+        meta["__trace__"] = msg.trace_ctx
+    if msg.span_summary:
+        meta["__spans__"] = msg.span_summary
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8)
     buf = io.BytesIO()
@@ -74,6 +80,8 @@ def decode(payload: bytes) -> Message:
     with np.load(io.BytesIO(payload), allow_pickle=False) as npz:
         meta = json.loads(bytes(npz["__meta__"]).decode("utf-8"))
         kind = meta.pop("kind")
+        trace_ctx = meta.pop("__trace__", None)
+        span_summary = meta.pop("__spans__", None)
         try:
             cls = MESSAGE_TYPES[kind]
         except KeyError:
@@ -92,7 +100,12 @@ def decode(payload: bytes) -> Message:
                 fname, _, key = rest.partition("/")
                 dicts.setdefault(fname, {})[key] = npz[name]
         kwargs.update(dicts)
-        return cls(**kwargs)
+        msg = cls(**kwargs)
+        if trace_ctx is not None:
+            msg.trace_ctx = trace_ctx
+        if span_summary is not None:
+            msg.span_summary = span_summary
+        return msg
 
 
 # ---------------------------------------------------------------------- #

@@ -53,6 +53,14 @@ def register_message(cls: Type["Message"]) -> Type["Message"]:
 @dataclasses.dataclass
 class Message:
     kind: ClassVar[str] = ""
+    #: observability sidecar, NOT dataclass fields: ``trace_ctx`` is the
+    #: caller's span context (``{"t": trace_id, "s": span_id}``) and
+    #: ``span_summary`` the server's finished-span exports riding back on
+    #: a response.  They travel in the codec's JSON header under reserved
+    #: ``__trace__``/``__spans__`` keys only when set, so an un-traced
+    #: message encodes to bit-identical wire bytes.
+    trace_ctx: ClassVar[Optional[Dict[str, int]]] = None
+    span_summary: ClassVar[Optional[list]] = None
     #: field -> required numpy dtype (coerced in __post_init__)
     _dtypes: ClassVar[Dict[str, Any]] = {}
     #: field -> tuple of permitted fixed dtypes, for payloads whose width
@@ -213,6 +221,7 @@ class IdsResp(Message):
 @dataclasses.dataclass
 class StatsReq(Message):
     kind = "stats"
+    want_obs: bool = False  # also pull the shard's Obs.drain() payload
 
 
 @register_message
@@ -221,6 +230,7 @@ class StatsResp(Message):
     kind = "stats_resp"
     stats: Optional[Dict[str, int]] = None
     n_live: int = 0
+    obs: Optional[Dict[str, Any]] = None  # Obs.drain() when requested
 
 
 # ---------------------------------------------------------------------- #

@@ -45,6 +45,7 @@ class ClusterService:
 
     def __init__(self, index: ClusterIndex):
         self.index = index
+        self.obs = index.obs  # server-side handle; NULL_OBS when cfg.obs off
         cfg = index.cfg
         self._mixed = cfg.backend in MIXED_KEY_BACKENDS
         self._lsh = GridLSH(cfg.d, cfg.eps, cfg.t, seed=cfg.seed)
@@ -72,7 +73,18 @@ class ClusterService:
         except KeyError:
             raise TypeError(
                 f"unhandled request {type(req).__name__}") from None
-        return fn(req)
+        ctx = req.trace_ctx
+        if ctx is None or not self.obs.enabled:
+            return fn(req)
+        # traced request: record a server-side span parented under the
+        # caller's wire span, and piggyback every finished span (this one
+        # plus any the engine recorded) on the response
+        tracer = self.obs.tracer
+        with tracer.adopt(ctx):
+            with tracer.span("shard." + req.kind):
+                resp = fn(req)
+        resp.span_summary = tracer.drain_export()
+        return resp
 
     def digest(self, X: np.ndarray) -> np.ndarray:
         """(n, d) -> (n, t, w) bucket-key digest in the wrapped engine's
@@ -138,9 +150,10 @@ class ClusterService:
         return m.IdsResp(ids=np.asarray(self.index.ids(), dtype=np.int64))
 
     def _stats(self, req: m.StatsReq) -> m.StatsResp:
+        obs = self.obs.drain() if req.want_obs else None
         return m.StatsResp(stats={k: int(v)
                                   for k, v in self.index.stats().items()},
-                           n_live=len(self.index))
+                           n_live=len(self.index), obs=obs)
 
     def _snapshot(self, req: m.SnapshotReq) -> m.SnapshotResp:
         return m.SnapshotResp(state=self.index.snapshot()["state"])

@@ -31,6 +31,7 @@ TCP and nothing above this module changes.
 from __future__ import annotations
 
 import abc
+import contextlib
 import json
 import os
 import socket
@@ -42,6 +43,7 @@ import numpy as np
 
 from ..api.config import ClusterConfig
 from ..api.registry import build_index
+from ..obs import NULL_OBS, Obs
 from . import messages as m
 from .codec import encode, decode, read_frame, write_frame
 # module (not name) import: this module is reached from repro.api's
@@ -61,8 +63,12 @@ class ShardUnavailableError(RuntimeError):
 class ShardClient(abc.ABC):
     """Typed client over one shard's ClusterService."""
 
-    def __init__(self, shard_id: int = 0):
+    def __init__(self, shard_id: int = 0, obs: Obs = NULL_OBS):
         self.shard_id = shard_id
+        #: the *coordinator's* Obs handle — wire spans and per-shard RPC
+        #: metrics are client-side observations (the shard records its own
+        #: server-side spans with its index's handle)
+        self.obs = obs
         self.bytes_sent = 0
         self.bytes_received = 0
         self.round_trips = 0
@@ -122,6 +128,11 @@ class ShardClient(abc.ABC):
         r = self.request(m.StatsReq())
         return dict(r.stats or {}), int(r.n_live)
 
+    def pull_obs(self) -> Optional[dict]:
+        """Drain the shard's server-side Obs payload (metrics snapshot +
+        finished spans), or None when the shard is un-instrumented."""
+        return self.request(m.StatsReq(want_obs=True)).obs
+
     def snapshot_state(self) -> Dict[str, np.ndarray]:
         return dict(self.request(m.SnapshotReq()).state or {})
 
@@ -135,9 +146,13 @@ class ShardClient(abc.ABC):
 class LocalTransport(ShardClient):
     """In-process shard: zero-copy dispatch straight into the service."""
 
-    def __init__(self, cfg: ClusterConfig, shard_id: int = 0):
-        super().__init__(shard_id)
+    def __init__(self, cfg: ClusterConfig, shard_id: int = 0,
+                 obs: Obs = NULL_OBS):
+        super().__init__(shard_id, obs=obs)
         self.index = build_index(cfg)
+        # label the in-process shard's own handle so its spans/metrics
+        # land in a per-shard lane, matching the process transport
+        self.index.obs.set_proc(f"shard{shard_id}")
         self.service = _service.ClusterService(self.index)
         # hot-path bindings: the sharded quotient build calls these
         # thousands of times per epoch — go straight to the engine, as the
@@ -151,19 +166,46 @@ class LocalTransport(ShardClient):
 
     def request(self, req: m.Message) -> m.Message:
         self.round_trips += 1
+        if self.obs.enabled:
+            ctx = self.obs.tracer.context()
+            if ctx is not None:
+                req.trace_ctx = ctx
+                resp = self.service.handle(req)
+                if resp.span_summary:
+                    self.obs.tracer.ingest(resp.span_summary)
+                    resp.span_summary = None
+                return resp
         return self.service.handle(req)
+
+    @contextlib.contextmanager
+    def _traced(self, op):
+        """Shard-lane span for the zero-copy bulk ops: nothing crosses a
+        wire here, but a traced run still renders the same
+        coordinator -> shard tree as the process transport."""
+        ctx = self.obs.tracer.context() if self.obs.enabled else None
+        if ctx is None:
+            yield
+            return
+        tr = self.index.obs.tracer
+        with tr.adopt(ctx):
+            with tr.span("shard." + op):
+                yield
+        self.obs.tracer.ingest(tr.drain_export())
 
     # bulk ops skip the message layer too: same arrays in, same dicts out
     def insert_batch(self, X, ids, want_digest=False):
-        out = self.index.insert_batch(X, ids=list(ids))
-        return out, (self.service.digest(np.asarray(X, dtype=np.float64))
-                     if want_digest else None)
+        with self._traced("insert_batch"):
+            out = self.index.insert_batch(X, ids=list(ids))
+            return out, (self.service.digest(np.asarray(X, dtype=np.float64))
+                         if want_digest else None)
 
     def delete_batch(self, ids):
-        self.index.delete_batch(list(ids))
+        with self._traced("delete_batch"):
+            self.index.delete_batch(list(ids))
 
     def labels(self, ids=None):
-        return self.index.labels(ids)
+        with self._traced("labels"):
+            return self.index.labels(ids)
 
     def drain_deltas(self):
         return self.index.drain_deltas()
@@ -188,8 +230,8 @@ class ProcessTransport(ShardClient):
     """Out-of-process shard: one spawned worker, one unix socket pair."""
 
     def __init__(self, cfg: ClusterConfig, shard_id: int = 0,
-                 timeout: Optional[float] = None):
-        super().__init__(shard_id)
+                 timeout: Optional[float] = None, obs: Obs = NULL_OBS):
+        super().__init__(shard_id, obs=obs)
         self._cfg = cfg
         parent, child = socket.socketpair()
         try:
@@ -204,7 +246,8 @@ class ProcessTransport(ShardClient):
             self._proc = subprocess.Popen(
                 [sys.executable, "-m", "repro.service.worker",
                  "--fd", str(child.fileno()),
-                 "--config", json.dumps(cfg.to_dict())],
+                 "--config", json.dumps(cfg.to_dict()),
+                 "--proc", f"shard{shard_id}"],
                 pass_fds=(child.fileno(),), env=env)
         finally:
             child.close()
@@ -220,6 +263,21 @@ class ProcessTransport(ShardClient):
         return ShardUnavailableError(self.shard_id, detail)
 
     def request(self, req: m.Message) -> m.Message:  # hot-path
+        if not self.obs.enabled:
+            return self._roundtrip(req)
+        # traced round trip: a client-side wire span whose context rides
+        # the request header; the worker's spans come back piggybacked on
+        # the response and fold into this process's buffer
+        tracer = self.obs.tracer
+        with tracer.span(f"wire.shard{self.shard_id}", op=req.kind) as sp:
+            req.trace_ctx = sp.wire_ctx()
+            resp = self._roundtrip(req)
+        if resp.span_summary:
+            tracer.ingest(resp.span_summary)
+            resp.span_summary = None
+        return resp
+
+    def _roundtrip(self, req: m.Message) -> m.Message:  # hot-path
         if self._sock is None:
             raise ShardUnavailableError(self.shard_id, "transport closed")
         try:
@@ -264,8 +322,9 @@ TRANSPORTS = {"local": LocalTransport, "process": ProcessTransport}
 
 
 def connect_shards(inner_cfg: ClusterConfig, n_shards: int,
-                   transport: str) -> List[ShardClient]:
-    """Build/spawn one ShardClient per shard for ``transport``."""
+                   transport: str, obs: Obs = NULL_OBS) -> List[ShardClient]:
+    """Build/spawn one ShardClient per shard for ``transport``; ``obs``
+    is the coordinator's handle (client-side wire spans/metrics)."""
     try:
         factory = TRANSPORTS[transport]
     except KeyError:
@@ -275,7 +334,7 @@ def connect_shards(inner_cfg: ClusterConfig, n_shards: int,
     clients: List[ShardClient] = []
     try:
         for s in range(n_shards):
-            clients.append(factory(inner_cfg, shard_id=s))
+            clients.append(factory(inner_cfg, shard_id=s, obs=obs))
     except Exception:
         for c in clients:
             c.close()

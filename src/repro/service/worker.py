@@ -20,6 +20,9 @@ def main(argv=None) -> int:
                     help="inherited stream-socket file descriptor")
     ap.add_argument("--config", required=True,
                     help="ClusterConfig of the served index, as JSON")
+    ap.add_argument("--proc", default=None,
+                    help="observability process label (e.g. 'shard3'); "
+                         "names this worker's lane in trace dumps")
     args = ap.parse_args(argv)
 
     # import late: argparse errors shouldn't cost a numpy import
@@ -27,9 +30,12 @@ def main(argv=None) -> int:
     from .service import ClusterService, serve_connection
 
     cfg = ClusterConfig.from_dict(json.loads(args.config))
+    index = build_index(cfg)
+    if args.proc:
+        index.obs.set_proc(args.proc)
     sock = socket.socket(fileno=args.fd)
     try:
-        serve_connection(ClusterService(build_index(cfg)), sock)
+        serve_connection(ClusterService(index), sock)
     finally:
         sock.close()
     return 0

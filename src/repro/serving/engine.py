@@ -25,6 +25,7 @@ import numpy as np
 
 from ..api import ClusterConfig, build_index
 from ..models.registry import ModelAPI
+from ..obs import NULL_OBS, Obs
 
 
 @dataclasses.dataclass
@@ -48,8 +49,17 @@ class ServingEngine:
                  cluster_backend: str = "batched",
                  cluster_shards: int = 1,
                  cluster_workers: int = 0,
-                 cluster_transport: str = "local"):
+                 cluster_transport: str = "local",
+                 obs: Obs = NULL_OBS):
         self.model = model
+        # serving telemetry: per-op latency + scheduler state gauges.
+        # Passing a live Obs also turns the clusterer's own obs knob on,
+        # so one handle observes the full request path.
+        self.obs = obs
+        self._h_submit_us = obs.histogram("serving.submit_us")
+        self._h_step_us = obs.histogram("serving.step_us")
+        self._g_queue = obs.gauge("serving.queue_depth")
+        self._g_active = obs.gauge("serving.active_slots")
         self.params = params
         self.B = batch
         self.kv_len = kv_len
@@ -76,7 +86,8 @@ class ServingEngine:
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
                                       backend=cluster_backend,
                                       workers=cluster_workers,
-                                      transport=cluster_transport)
+                                      transport=cluster_transport,
+                                      obs=obs.enabled)
                         .with_shards(cluster_shards))
             if cluster_requests else None
         )
@@ -86,6 +97,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        with self.obs.tracer.span("serving.submit", rid=req.rid), \
+                self._h_submit_us.timer():
+            self._submit_impl(req)
+        self._g_queue.set(len(self.queue))
+
+    def _submit_impl(self, req: Request) -> None:
         req.out_tokens = []
         if self.clusterer is not None and req.embedding is not None:
             idx = self.clusterer.insert_batch(req.embedding[None])[0]
@@ -148,6 +165,13 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     def step(self) -> int:
         """One fused decode step for all active slots; returns #active."""
+        with self._h_step_us.timer():
+            n = self._step_impl()
+        self._g_queue.set(len(self.queue))
+        self._g_active.set(n)
+        return n
+
+    def _step_impl(self) -> int:
         self._schedule()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:

@@ -61,6 +61,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core.dynamic_dbscan import NOISE
+from ..obs import NULL_OBS, Obs
 
 BucketKey = Tuple[int, bytes]  # (table, key bytes)
 
@@ -86,10 +87,20 @@ class _Reps:
 
 class BoundaryBridge:
     def __init__(self, t: int, k: int, attach_orphans: bool = True,
-                 incremental: bool = True):
+                 incremental: bool = True, obs: Obs = NULL_OBS):
         self.t, self.k = int(t), int(k)
         self.attach_orphans = attach_orphans
         self.incremental = bool(incremental)
+        self.obs = obs
+        # instruments bound once (no-ops when un-instrumented); the
+        # rep-cache counters split the lazy-repair bookkeeping into the
+        # hit/miss view the observability report wants
+        self._h_quotient_us = obs.histogram("bridge.quotient_us")
+        self._h_merge_us = obs.histogram("bridge.merge_us")
+        self._c_q_hit = obs.counter("bridge.quotient_cache_hit")
+        self._c_q_miss = obs.counter("bridge.quotient_cache_miss")
+        self._c_rep_hit = obs.counter("bridge.rep_cache_hit")
+        self._c_rep_miss = obs.counter("bridge.rep_cache_miss")
         self.members: Dict[BucketKey, Set[int]] = {}
         self.shard_count: Dict[BucketKey, Dict[int, int]] = {}
         self.keys: Dict[int, List[bytes]] = {}
@@ -164,15 +175,18 @@ class BoundaryBridge:
         only when the cached one was removed."""
         ent = self._reps[b]
         m = ent.lc_rep.get(shard)
-        if m is None:
-            self.n_rep_repairs += 1
-            for y in self.members[b]:
-                if (self.home[y] == shard and self.support[y] > 0
-                        and self.local_support[y] > 0):
-                    m = y
-                    break
-            assert m is not None, (b, shard)
-            ent.lc_rep[shard] = m
+        if m is not None:
+            self._c_rep_hit.inc()
+            return m
+        self.n_rep_repairs += 1
+        self._c_rep_miss.inc()
+        for y in self.members[b]:
+            if (self.home[y] == shard and self.support[y] > 0
+                    and self.local_support[y] > 0):
+                m = y
+                break
+        assert m is not None, (b, shard)
+        ent.lc_rep[shard] = m
         return m
 
     def _pre(self, pre: Dict[int, Tuple[int, int]], m: int) -> None:
@@ -382,7 +396,9 @@ class BoundaryBridge:
             return None
         rep = self._rep.get(b)
         if rep is not None and rep in mem and self.support.get(rep, 0) > 0:
+            self._c_rep_hit.inc()
             return rep
+        self._c_rep_miss.inc()
         for m in mem:
             if self.support.get(m, 0) > 0:
                 self._rep[b] = m
@@ -398,6 +414,20 @@ class BoundaryBridge:
     # hot-path
     def _quotient(self, comp_of: Callable[[int], int],
                   comp_of_batch: Optional[Callable] = None) -> Dict[int, int]:
+        """Epoch-cached entry to :meth:`_quotient_build`: the common case
+        (no mutation since the last query) is one dict lookup."""
+        if self._q_epoch == self.epoch:
+            self._c_q_hit.inc()
+            return self._q_parent
+        self._c_q_miss.inc()
+        with self.obs.tracer.span("bridge.quotient",
+                                  interesting=len(self.interesting)), \
+                self._h_quotient_us.timer():
+            return self._quotient_build(comp_of, comp_of_batch)
+
+    def _quotient_build(self, comp_of: Callable[[int], int],
+                        comp_of_batch: Optional[Callable] = None
+                        ) -> Dict[int, int]:
         """The epoch's quotient union-find over inner component handles:
         chain every interesting bucket's merge representatives through
         their current inner components.  A handle is whatever the inner
@@ -415,8 +445,6 @@ class BoundaryBridge:
         result is identical either way: union is by min handle, so the
         final roots do not depend on resolution or chaining order.
         """
-        if self._q_epoch == self.epoch:
-            return self._q_parent
         keys = self.keys
         home = self.home
         # 1. gather: each chained bucket's units as resolution tasks.
@@ -523,6 +551,13 @@ class BoundaryBridge:
         interesting-bucket set instead of scanning the whole directory —
         exact, because the local chains already cover every other bucket.
         """
+        with self.obs.tracer.span("bridge.merge",
+                                  boundary_only=boundary_only), \
+                self._h_merge_us.timer():
+            return self._merge_impl(shard_labels, boundary_only)
+
+    def _merge_impl(self, shard_labels: Iterable[Dict[int, int]],
+                    boundary_only: bool) -> Dict[int, int]:
         if boundary_only:
             self.n_boundary_merges += 1
         else:

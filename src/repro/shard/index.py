@@ -50,7 +50,9 @@ collision-graph components, so shard-local merges would over-connect) and
 
 from __future__ import annotations
 
+import contextvars
 from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
 from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple, Union)
 
@@ -61,6 +63,7 @@ from ..api.config import ClusterConfig
 from ..api.index import ClusterIndex
 from ..core.dynamic_dbscan import NOISE, check_unique_ids
 from ..core.hashing import GridLSH
+from ..obs import merge_snapshots, write_chrome
 from ..service.transport import ShardClient, connect_shards
 from .bridge import BoundaryBridge
 from .router import RebalancePlan, ShardRouter
@@ -84,8 +87,9 @@ class ShardedIndex(ClusterIndex):
         self._inner_cfg = cfg.replace(backend=cfg.inner_backend,
                                       transport="local")
         self._process = cfg.transport == "process"
+        self.obs.set_proc("coordinator")
         self.clients: List[ShardClient] = connect_shards(
-            self._inner_cfg, cfg.shards, cfg.transport)
+            self._inner_cfg, cfg.shards, cfg.transport, obs=self.obs)
         try:
             self._init_rest(cfg)
         except Exception:
@@ -113,7 +117,17 @@ class ShardedIndex(ClusterIndex):
         self.native_component_queries = self._incremental
         self.bridge = BoundaryBridge(cfg.t, cfg.k,
                                      attach_orphans=cfg.attach_orphans,
-                                     incremental=self._incremental)
+                                     incremental=self._incremental,
+                                     obs=self.obs)
+        # coordinator-side instruments, bound once (no-ops when cfg.obs is
+        # off): per-op latency plus one RPC histogram per shard — the
+        # telemetry the straggler detector and the serving report read
+        self._h_insert_us = self.obs.histogram("coord.insert_batch_us")
+        self._h_delete_us = self.obs.histogram("coord.delete_batch_us")
+        self._h_label_us = self.obs.histogram("coord.label_us")
+        self._h_labels_us = self.obs.histogram("coord.labels_us")
+        self._h_rpc = [self.obs.histogram(f"rpc.shard{s}_us")
+                       for s in range(cfg.shards)]
         # thread-pool fan-out: opt-in via workers for local shards; always
         # on for process shards (the threads only block on sockets, so the
         # worker processes update truly in parallel).  workers=1 forces a
@@ -203,11 +217,29 @@ class ShardedIndex(ClusterIndex):
 
         Shards never share inner state, so per-shard jobs are safe to run
         concurrently; results (and the first exception) are collected in
-        shard order, keeping the fan-out deterministic."""
+        shard order, keeping the fan-out deterministic.  Instrumented
+        fan-outs time each job into that shard's RPC histogram (the
+        straggler signal) and submit under a copied contextvars context so
+        wire spans parent under the coordinator's op span even from pool
+        threads."""
+        if self.obs.enabled:
+            jobs = {s: self._timed_job(self._h_rpc[s], fn)
+                    for s, fn in jobs.items()}
         if self._pool is None or len(jobs) <= 1:
             return {s: fn() for s, fn in jobs.items()}
-        futures = {s: self._pool.submit(fn) for s, fn in jobs.items()}
+        if self.obs.enabled:
+            futures = {s: self._pool.submit(contextvars.copy_context().run, fn)
+                       for s, fn in jobs.items()}
+        else:
+            futures = {s: self._pool.submit(fn) for s, fn in jobs.items()}
         return {s: futures[s].result() for s in sorted(futures)}
+
+    @staticmethod
+    def _timed_job(hist, fn: Callable[[], Any]) -> Callable[[], Any]:
+        def run() -> Any:
+            with hist.timer():
+                return fn()
+        return run
 
     # ------------------------------------------------------------------ #
     # mutations
@@ -219,6 +251,14 @@ class ShardedIndex(ClusterIndex):
 
     def insert_batch(self, X: np.ndarray,
                      ids: Optional[Sequence[Optional[int]]] = None) -> List[int]:
+        if not self.obs.enabled:
+            return self._insert_batch_impl(X, ids)
+        with self.obs.tracer.span("coord.insert_batch", n=len(X)), \
+                self._h_insert_us.timer():
+            return self._insert_batch_impl(X, ids)
+
+    def _insert_batch_impl(self, X: np.ndarray,
+                           ids: Optional[Sequence[Optional[int]]]) -> List[int]:
         X = np.asarray(X, dtype=np.float64)
         if X.ndim != 2 or X.shape[1] != self.cfg.d:
             raise ValueError(f"batch shape {X.shape} != (n, {self.cfg.d})")
@@ -268,22 +308,30 @@ class ShardedIndex(ClusterIndex):
                 sub = self._digest_keys(results[s][1], self.cfg.t)
                 for pos, j in enumerate(rows):
                     keys[j] = sub[pos]
-        for j in range(n):
-            s = int(shards[j])
-            self._home[out[j]] = s
-            self.bridge.insert(out[j], keys[j], s)
+        with self.obs.tracer.span("bridge.insert", n=n):
+            for j in range(n):
+                s = int(shards[j])
+                self._home[out[j]] = s
+                self.bridge.insert(out[j], keys[j], s)
         self._cache = None
         return out
 
     def delete(self, idx: int) -> None:
-        if idx not in self._home:
-            raise KeyError(idx)
-        s = self._home.pop(idx)
-        self.clients[s].delete_batch([idx])
-        self.bridge.delete(idx, s)
-        self._cache = None
+        with self.obs.tracer.span("coord.delete"), \
+                self._h_delete_us.timer():
+            if idx not in self._home:
+                raise KeyError(idx)
+            s = self._home.pop(idx)
+            self.clients[s].delete_batch([idx])
+            self.bridge.delete(idx, s)
+            self._cache = None
 
     def delete_batch(self, ids: Sequence[int]) -> None:
+        with self.obs.tracer.span("coord.delete_batch", n=len(ids)), \
+                self._h_delete_us.timer():
+            self._delete_batch_impl(ids)
+
+    def _delete_batch_impl(self, ids: Sequence[int]) -> None:
         check_unique_ids(ids)
         for i in ids:
             if i not in self._home:
@@ -357,6 +405,12 @@ class ShardedIndex(ClusterIndex):
         bridge-find (quotient over the maintained boundary-bucket set) —
         and returns an *opaque* component handle (the protocol's
         contract); ``labels()`` stays canonical."""
+        if not self.obs.enabled:  # un-instrumented: zero added work
+            return self._label_impl(idx)
+        with self._h_label_us.timer():
+            return self._label_impl(idx)
+
+    def _label_impl(self, idx: int) -> int:  # hot-path
         if idx not in self._home:
             raise KeyError(idx)
         if self._cache is not None:
@@ -369,10 +423,12 @@ class ShardedIndex(ClusterIndex):
         return self._all_labels()[idx]
 
     def labels(self, ids: Optional[Iterable[int]] = None) -> Dict[int, int]:
-        all_lab = self._all_labels()
-        if ids is None:
-            return dict(all_lab)
-        return {i: all_lab[i] for i in ids}
+        with self.obs.tracer.span("coord.labels"), \
+                self._h_labels_us.timer():
+            all_lab = self._all_labels()
+            if ids is None:
+                return dict(all_lab)
+            return {i: all_lab[i] for i in ids}
 
     def component_of(self, idx: int) -> int:
         return self.label(idx)
@@ -521,6 +577,48 @@ class ShardedIndex(ClusterIndex):
                 if r != NOISE:  # handles <-> oracle labels bijectively
                     assert fwd.setdefault(r, oracle[i]) == oracle[i], i
                     assert rev.setdefault(oracle[i], r) == r, i
+
+    # ------------------------------------------------------------------ #
+    # observability (pull model: structural gauges are refreshed when a
+    # snapshot is taken, so the mutation hot paths never touch them)
+    # ------------------------------------------------------------------ #
+    def obs_refresh(self) -> None:
+        """Refresh the structural gauges from current coordinator state."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        b = self.bridge
+        obs.gauge("bridge.interesting_buckets").set(len(b.interesting))
+        obs.gauge("bridge.boundary_buckets").set(b.n_boundary_buckets)
+        obs.gauge("bridge.directory_buckets").set(len(b.members))
+        obs.gauge("bridge.epoch").set(b.epoch)
+        sizes = self.shard_sizes()
+        obs.gauge("router.load_skew").set(self.router.load_skew(sizes))
+        for s, sz in enumerate(sizes):
+            obs.gauge(f"shard{s}.points").set(sz)
+
+    def obs_snapshot(self, drain: bool = False) -> List[Dict[str, Any]]:
+        """Per-process observability snapshots: the coordinator's followed
+        by each shard's (pulled through the protocol — one StatsReq round
+        trip per shard, which drains the shard's span buffer, so a shard
+        span appears in exactly one snapshot).  ``drain`` additionally
+        clears the coordinator's own span buffer.  ``[]`` when
+        un-instrumented."""
+        if not self.obs.enabled:
+            return []
+        self.obs_refresh()
+        snaps = [self.obs.drain() if drain else self.obs.snapshot()]
+        for c in self.clients:
+            payload = c.pull_obs()
+            if payload:
+                snaps.append(payload)
+        return snaps
+
+    def write_trace(self, path: Union[str, Path]) -> Path:
+        """Dump every span recorded so far — coordinator, wire, and shard
+        side — as one Chrome/Perfetto trace-event file."""
+        merged = merge_snapshots(self.obs_snapshot())
+        return write_chrome(path, merged["spans"])
 
     def stats(self) -> Dict[str, int]:
         sizes = self.shard_sizes()

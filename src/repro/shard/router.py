@@ -150,6 +150,16 @@ class ShardRouter:
         return np.bincount(np.asarray(slots, dtype=np.int64),
                            minlength=SLOTS)
 
+    @staticmethod
+    def load_skew(sizes: "List[int]") -> float:
+        """Key-range skew of observed per-shard occupancy: max over mean
+        (1.0 = perfectly balanced; 0.0 for an empty index).  The gauge the
+        observability layer and rebalance planning read."""
+        total = sum(sizes)
+        if not sizes or total == 0:
+            return 0.0
+        return max(sizes) * len(sizes) / total
+
     # ------------------------------------------------------------------ #
     # persistence
     # ------------------------------------------------------------------ #

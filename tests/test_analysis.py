@@ -25,6 +25,7 @@ from repro.analysis import cli
 from repro.analysis.concurrency_pass import ConcurrencyGuards
 from repro.analysis.hotpath_pass import HotPathPurity
 from repro.analysis.protocol_pass import ProtocolExhaustiveness
+from repro.analysis.obs_pass import ObsDiscipline
 from repro.analysis.registry_pass import RegistryConformance
 from repro.analysis.walker import Project, SourceFile
 
@@ -532,8 +533,57 @@ class TestCli:
         assert cli.main(["--list"]) == 0
         out = capsys.readouterr().out
         for name in ("protocol-exhaustiveness", "hot-path-purity",
-                     "concurrency-guards", "registry-conformance"):
+                     "concurrency-guards", "registry-conformance",
+                     "obs-discipline"):
             assert name in out
+
+
+# ---------------------------------------------------------------------- #
+# obs discipline
+# ---------------------------------------------------------------------- #
+class TestObsDiscipline:
+    def test_open_coded_span_and_timer_are_flagged(self, tmp_path):
+        project = make_project(tmp_path, {"service/handler.py": """\
+            class Svc:
+                def handle(self, req):
+                    sp = self.obs.tracer.span("shard.op")  # stored, leaks
+                    sp.__enter__()
+                    t = self.h.timer()
+                    return req
+        """})
+        assert rules(ObsDiscipline().run(project)) == ["OBS001", "OBS001"]
+
+    def test_with_statement_items_are_clean(self, tmp_path):
+        project = make_project(tmp_path, {"shard/coord.py": """\
+            class Coord:
+                def insert(self, X):
+                    with self.obs.tracer.span("coord.insert", n=len(X)), \\
+                            self._h_insert_us.timer():
+                        return self._impl(X)
+
+                def merge(self):
+                    with self.obs.tracer.span("bridge.merge"):
+                        with self._h_merge_us.timer():
+                            return self._merge_impl()
+        """})
+        assert ObsDiscipline().run(project) == []
+
+    def test_scope_is_service_and_shard_only(self, tmp_path):
+        # an unrelated .timer() API outside the protocol modules is fine
+        project = make_project(tmp_path, {"serving/loop.py": """\
+            def tick(clock):
+                t = clock.timer()
+                return t.elapsed()
+        """})
+        assert ObsDiscipline().run(project) == []
+
+    def test_suppression_pragma(self, tmp_path):
+        project = make_project(tmp_path, {"service/handler.py": """\
+            def probe(h):
+                t = h.timer()  # analysis: allow[OBS001]
+                return t
+        """})
+        assert ObsDiscipline().run(project) == []
 
 
 # ---------------------------------------------------------------------- #

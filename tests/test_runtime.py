@@ -51,6 +51,28 @@ def test_straggler_detection():
     assert sd.stragglers() == []
 
 
+def test_straggler_fed_from_obs_histograms():
+    """The serving-side signal: per-shard RPC latency histograms from an
+    Obs snapshot stand in for synthetic step-time probes."""
+    from repro.obs import Obs
+
+    obs = Obs(proc="coordinator")
+    sd = StragglerDetector(3, threshold=1.5, patience=2)
+    for round_ in range(6):
+        for s, lat_us in enumerate((1000.0, 1100.0, 9000.0)):
+            obs.histogram(f"rpc.shard{s}_us").observe(lat_us)
+        fed = sd.record_from_obs(obs.snapshot()["metrics"])
+        assert fed == [0, 1, 2]
+    assert sd.stragglers() == [2]
+    # p50 microseconds scale to seconds
+    assert 0.0005 < sd.ewma(0) < 0.005
+    # a snapshot with no matching histograms feeds nothing and leaves
+    # breach counters untouched
+    assert sd.record_from_obs({"unrelated": {"type": "counter",
+                                             "value": 3}}) == []
+    assert sd.stragglers() == [2]
+
+
 # --------------------------------------------------------------------- #
 # elastic planning
 # --------------------------------------------------------------------- #

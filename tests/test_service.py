@@ -351,3 +351,49 @@ def test_config_validates_transport_by_name():
         ClusterConfig(d=2, k=2, t=2, eps=0.5, transport="carrier-pigeon")
     for tr in ("local", "process"):
         ClusterConfig(d=2, k=2, t=2, eps=0.5, transport=tr)
+
+
+# ---------------------------------------------------------------------- #
+# observability must not perturb the clustering (PR 7)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("transport", ["local", "process"])
+def test_obs_toggle_is_label_invariant(transport):
+    """The instrumented run answers bit-identically to the bare one on
+    the same seeded stream — tracing rides out-of-band and the no-op
+    registry keeps the disabled path untouched."""
+    chunks, alive = interleaved_chunks(n=150, d=4, seed=11)
+    bare = build_index(cfg_for(2, transport, seed=11, obs=False))
+    traced = build_index(cfg_for(2, transport, seed=11, obs=True))
+    try:
+        for chunk in chunks:
+            assert bare.apply(chunk) == traced.apply(chunk)
+        assert traced.labels() == bare.labels()
+        for i in alive[:12]:
+            assert traced.label(i) == bare.label(i)
+        traced.check_invariants()
+        # the instrumented run actually observed something...
+        snaps = traced.obs_snapshot()
+        assert snaps and any(s["metrics"] for s in snaps)
+        # ...while the bare run carries the shared null handle
+        assert not bare.obs.enabled and bare.obs_snapshot() == []
+    finally:
+        bare.close()
+        traced.close()
+
+
+def test_untraced_requests_put_no_obs_bytes_on_the_wire():
+    """Frame-level guard: with obs disabled the encoded request stream is
+    byte-identical to the pre-obs wire format — no reserved keys leak."""
+    req = InsertBatchReq(X=np.arange(8.0).reshape(4, 2), ids=[0, 1, 2, 3])
+    raw = encode(req)
+    assert b"__trace__" not in raw and b"__spans__" not in raw
+    again = InsertBatchReq(X=np.arange(8.0).reshape(4, 2), ids=[0, 1, 2, 3])
+    assert encode(again) == raw  # deterministic and sidecar-free
+    # a traced peer's sidecar survives the round trip without touching
+    # the dataclass fields
+    traced_req = InsertBatchReq(X=np.arange(8.0).reshape(4, 2),
+                                ids=[0, 1, 2, 3])
+    traced_req.trace_ctx = {"t": 9, "s": 4}
+    back = decode(encode(traced_req))
+    assert back.trace_ctx == {"t": 9, "s": 4}
+    assert np.array_equal(back.X, req.X)
