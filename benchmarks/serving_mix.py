@@ -17,6 +17,18 @@ any mutation; the incremental bridge turns that into
   PYTHONPATH=src python -m benchmarks.serving_mix            # full sweep
   PYTHONPATH=src python -m benchmarks.serving_mix --smoke --workers 2
   PYTHONPATH=src python -m benchmarks.serving_mix --smoke --transport process
+
+``--chaos kill-one`` switches from sweep to acceptance mode: one sharded
+run where shard 0's primary worker is killed mid-workload.  The run
+counts requests that surfaced errors and replays the identical mutation
+schedule on an in-process oracle index; with ``--replicas R>0`` the kill
+must be invisible (zero failed requests, labels bit-identical to the
+oracle — the CI ``chaos-smoke`` job asserts exactly this), while
+``--replicas 0`` documents the failure mode (every post-kill request
+fails fast with ShardUnavailableError).
+
+  PYTHONPATH=src python -m benchmarks.serving_mix --smoke \
+      --transport tcp --replicas 2 --chaos kill-one
 """
 
 from __future__ import annotations
@@ -40,24 +52,59 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, dtype=np.float64), q)) if xs else 0.0
 
 
+def _kill_one(index) -> None:
+    """Chaos injection: SIGKILL shard 0's primary worker process.  With
+    replicas the lane promotes + resyncs; without, subsequent requests to
+    that shard must fail fast (never hang)."""
+    lane = index.clients[0]
+    members = getattr(lane, "_members", None)
+    client = members[0].client if members else lane
+    proc = getattr(client, "_proc", None)
+    if proc is None:
+        raise SystemExit("--chaos kill-one needs --transport process or tcp "
+                         "(there is no worker process to kill)")
+    proc.kill()
+
+
 def run_one(shards: int, workers: int, incremental: bool, *, n: int,
             batch: int, rounds: int, queries: int, inner: str = "batched",
-            transport: str = "local", seed: int = 0, obs: bool = False,
-            trace_out=None) -> dict:
+            transport: str = "local", replicas: int = 0, chaos: str = None,
+            seed: int = 0, obs: bool = False, trace_out=None) -> dict:
     X, _ = blobs(n=n + batch * (rounds + 1), d=10, n_clusters=10, seed=seed)
     cfg = ClusterConfig(d=X.shape[1], k=K, t=T, eps=EPS, seed=seed,
                         workers=workers, incremental_merge=incremental,
                         obs=obs)
     cfg = (cfg.replace(backend=inner) if shards <= 1 else
            cfg.replace(backend="sharded", shards=shards, inner_backend=inner,
-                       transport=transport))
+                       transport=transport, replicas=replicas))
     index = build_index(cfg)
+    # fault-free oracle: the same mutation schedule through in-process
+    # shards.  The chaos run must end bit-identical to it — failover is
+    # only correct if the user can't tell it happened.
+    oracle = (build_index(cfg.replace(transport="local", replicas=0,
+                                      obs=False))
+              if chaos else None)
     rng = np.random.default_rng(seed)
+
+    failed_requests: list = []
+
+    def attempt(what, fn, *a):
+        """Run one user-visible request; under chaos, surviving errors are
+        counted instead of aborting the workload."""
+        if chaos is None:
+            return True, fn(*a)
+        try:
+            return True, fn(*a)
+        except Exception as e:
+            failed_requests.append(f"{what}: {type(e).__name__}: {e}")
+            return False, None
 
     ids: list = []
     row = 0
     while row < n:
         ids.extend(index.insert_batch(X[row:row + batch]))
+        if oracle is not None:
+            oracle.insert_batch(X[row:row + batch])
         row += batch
 
     after_update_us: list = []   # first label() after a mutation batch
@@ -69,40 +116,70 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
         targets = [ids[int(j)] for j in rng.integers(0, len(ids), size=queries)]
         for qi, i in enumerate(targets):
             t0 = time.perf_counter()
-            index.label(i)
+            ok, _ = attempt(f"label({i})", index.label, i)
             dt = (time.perf_counter() - t0) * 1e6
-            (after_update_us if qi == 0 else steady_us).append(dt)
+            if ok:
+                (after_update_us if qi == 0 else steady_us).append(dt)
 
-    for _ in range(rounds):
+    for rnd in range(rounds):
+        if chaos == "kill-one" and rnd == 1:
+            _kill_one(index)   # mid-workload: mutations still in flight
         t0 = time.perf_counter()
-        ids.extend(index.insert_batch(X[row:row + batch]))
+        ok, new_ids = attempt("insert_batch", index.insert_batch,
+                              X[row:row + batch])
         t_updates += time.perf_counter() - t0
+        if ok:
+            ids.extend(new_ids)
+            if oracle is not None:
+                oracle.insert_batch(X[row:row + batch])
+            n_updates += batch
         row += batch
-        n_updates += batch
         probe()
         t0 = time.perf_counter()
-        index.delete_batch(ids[:batch])
+        ok, _ = attempt("delete_batch", index.delete_batch, ids[:batch])
         t_updates += time.perf_counter() - t0
-        ids = ids[batch:]
-        n_updates += batch
+        if ok:
+            if oracle is not None:
+                oracle.delete_batch(ids[:batch])
+            ids = ids[batch:]
+            n_updates += batch
         probe()
 
     t0 = time.perf_counter()
-    n_clusters = len({v for v in index.labels().values() if v >= 0})
+    ok, labels = attempt("labels", index.labels)
+    n_clusters = (len({v for v in labels.values() if v >= 0}) if ok else -1)
     t_labels = time.perf_counter() - t0
-    stats = index.stats()
-    live_points = len(index)
+    labels_match = None
+    if oracle is not None:
+        labels_match = bool(ok and labels == oracle.labels())
+        oracle.close()
+    # the epilogue also fans out; with replicas=0 chaos the dead shard is
+    # still dead here, so degrade to placeholders instead of crashing
+    ok, stats = attempt("stats", index.stats)
+    stats = stats if ok else {}
+    ok, live_points = attempt("len", index.__len__)
+    live_points = live_points if ok else -1
     obs_row = None
     if obs and index.obs.enabled:
         # structural gauges refresh at snapshot time; the histograms the
         # workload already filled (per-op + per-shard RPC latency) ride
         # into the result row so a regression diff says *where* time went
-        if hasattr(index, "obs_refresh"):
-            index.obs_refresh()
-        snaps = (index.obs_snapshot() if hasattr(index, "obs_snapshot")
-                 else [index.obs.snapshot()])
+        ok, _ = attempt("obs_refresh",
+                        getattr(index, "obs_refresh", lambda: None))
+        ok, snaps = attempt("obs_snapshot",
+                            index.obs_snapshot
+                            if hasattr(index, "obs_snapshot")
+                            else lambda: [index.obs.snapshot()])
+        if not ok:
+            snaps = [index.obs.snapshot()]
         merged = merge_snapshots(snaps)
         obs_row = {"histograms": histogram_summary(merged["metrics"]),
+                   # nonzero counters only — this is where a chaos run
+                   # shows its failover.promotions / rpc.retries
+                   "counters": {k: m["value"]
+                                for k, m in sorted(merged["metrics"].items())
+                                if m.get("type") == "counter"
+                                and m.get("value")},
                    "n_spans": len(merged["spans"]),
                    "spans_dropped": merged["spans_dropped"]}
         if trace_out is not None:
@@ -115,6 +192,11 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
         "incremental": bool(incremental),
         "inner": inner,
         "transport": transport if shards > 1 else "local",
+        "replicas": replicas if shards > 1 else 0,
+        "chaos": chaos or "",
+        "failed_requests": len(failed_requests),
+        "failed_request_samples": failed_requests[:5],
+        "labels_match_oracle": labels_match,
         "live_points": live_points,
         "updates_per_s": n_updates / t_updates,
         "label_after_update_p50_us": _pct(after_update_us, 50),
@@ -138,8 +220,8 @@ def run_one(shards: int, workers: int, incremental: bool, *, n: int,
 
 def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
         rounds: int = 4, queries: int = 16, inner: str = "batched",
-        transport: str = "local", seed: int = 0, obs: bool = False,
-        trace_out=None) -> list:
+        transport: str = "local", replicas: int = 0, seed: int = 0,
+        obs: bool = False, trace_out=None) -> list:
     """Full sweep: every shard count with the serial/threaded fan-out and
     the incremental merge on/off (off only where it changes anything:
     S > 1).  ``transport="process"`` runs the sharded rows out-of-process
@@ -157,8 +239,8 @@ def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
                         else None)
                 r = run_one(S, W, inc, n=n, batch=batch, rounds=rounds,
                             queries=queries, inner=inner,
-                            transport=transport, seed=seed, obs=obs,
-                            trace_out=dump)
+                            transport=transport, replicas=replicas,
+                            seed=seed, obs=obs, trace_out=dump)
                 rows.append(r)
                 print(f"S={S} workers={W} incremental={str(inc):5s} "
                       f"transport={r['transport']:7s}  "
@@ -181,6 +263,40 @@ def run(shards=(1, 4, 8), workers=(0, 4), n: int = 16000, batch: int = 500,
     return rows
 
 
+def run_chaos(shards: int, workers: int, *, n: int, batch: int, rounds: int,
+              queries: int, inner: str, transport: str, replicas: int,
+              chaos: str, seed: int = 0, obs: bool = False,
+              trace_out=None) -> int:
+    """Acceptance mode: one sharded run with fault injection, checked
+    against the fault-free oracle.  Returns a process exit code: 0 only
+    if (replicas > 0) no request failed and the final labels are
+    bit-identical to the oracle, or (replicas == 0) the kill surfaced as
+    fast failures rather than a hang."""
+    r = run_one(shards, workers, True, n=n, batch=batch, rounds=rounds,
+                queries=queries, inner=inner, transport=transport,
+                replicas=replicas, chaos=chaos, seed=seed, obs=obs,
+                trace_out=trace_out)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "serving_mix_chaos.json").write_text(json.dumps([r], indent=1))
+    print(f"chaos={chaos} shards={shards} replicas={replicas} "
+          f"transport={transport}: {r['failed_requests']} failed requests, "
+          f"labels_match_oracle={r['labels_match_oracle']}")
+    for s in r["failed_request_samples"]:
+        print(f"  failed: {s}")
+    if replicas > 0:
+        ok = r["failed_requests"] == 0 and r["labels_match_oracle"]
+        if not ok:
+            print("FAIL: failover was user-visible (expected zero failed "
+                  "requests and oracle-identical labels)")
+        return 0 if ok else 1
+    # replicas=0: the kill is *supposed* to surface — reaching this line
+    # at all proves nothing hung; fail only if no error surfaced.
+    if r["failed_requests"] == 0:
+        print("FAIL: killed a worker with replicas=0 but no request failed")
+        return 1
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -191,9 +307,17 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--inner", default="batched")
     ap.add_argument("--transport", default="local",
-                    choices=("local", "process"),
-                    help="run the sharded rows through in-process shards "
-                         "or spawned per-shard server processes")
+                    choices=("local", "process", "tcp"),
+                    help="run the sharded rows through in-process shards, "
+                         "spawned per-shard server processes, or TCP with "
+                         "timeouts/retries/auth")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="replicas per shard (sharded rows only): a lane "
+                         "of 1+R workers with failover")
+    ap.add_argument("--chaos", default=None, choices=("kill-one",),
+                    help="acceptance mode: kill shard 0's primary worker "
+                         "mid-workload and check the run against a "
+                         "fault-free oracle (single run, not a sweep)")
     ap.add_argument("--obs", action="store_true",
                     help="instrument the runs (repro.obs): per-op latency "
                          "histograms land in each result row")
@@ -203,17 +327,31 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.trace_out is not None and not args.obs:
         ap.error("--trace-out needs --obs")
+    if args.chaos is not None:
+        if args.transport == "local":
+            ap.error("--chaos needs --transport process or tcp")
+        smoke = dict(n=1200, batch=100, rounds=3, queries=8)
+        full = dict(n=16000, batch=500, rounds=4, queries=16)
+        kw = smoke if args.smoke else full
+        if args.n:
+            kw["n"] = args.n
+        raise SystemExit(run_chaos(
+            shards=max(args.shards or (2,)),
+            workers=max(args.workers or (0,)),
+            inner=args.inner, transport=args.transport,
+            replicas=args.replicas, chaos=args.chaos,
+            obs=args.obs, trace_out=args.trace_out, **kw))
     if args.smoke:
         run(shards=tuple(args.shards or (1, 2)),
             workers=tuple(args.workers or (0, 2)),
             n=args.n or 1200, batch=100, rounds=3, queries=8,
             inner=args.inner, transport=args.transport,
-            obs=args.obs, trace_out=args.trace_out)
+            replicas=args.replicas, obs=args.obs, trace_out=args.trace_out)
     else:
         run(shards=tuple(args.shards or (1, 4, 8)),
             workers=tuple(args.workers or (0, 4)),
             n=args.n or 16000, inner=args.inner, transport=args.transport,
-            obs=args.obs, trace_out=args.trace_out)
+            replicas=args.replicas, obs=args.obs, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

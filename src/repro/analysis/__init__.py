@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.analysis [--json] [--select PASSES]
 
-Five passes guard the invariants the repo otherwise enforces only by
+Six passes guard the invariants the repo otherwise enforces only by
 convention (see each module's docstring for the rule tables):
 
   * ``protocol-exhaustiveness`` — every ``repro.service`` message is
@@ -14,6 +14,9 @@ convention (see each module's docstring for the rule tables):
   * ``concurrency-guards`` — fan-out callables never mutate
     coordinator-owned state (bridge/router/home map), and transport
     error paths chain their raises;
+  * ``fault-tolerance-guards`` — every ``except ShardUnavailableError``
+    in ``service/``/``shard/`` re-raises or routes to the failover path
+    (a dead shard must surface or be failed over, never swallowed);
   * ``registry-conformance`` — every registered backend implements the
     full ClusterIndex protocol with paired snapshot/restore and a
     truthful ``native_component_queries`` capability flag;

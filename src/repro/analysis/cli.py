@@ -25,6 +25,7 @@ from .walker import Project
 
 # importing the pass modules populates the registry
 from . import concurrency_pass  # noqa: F401
+from . import fault_pass  # noqa: F401
 from . import hotpath_pass  # noqa: F401
 from . import obs_pass  # noqa: F401
 from . import protocol_pass  # noqa: F401

@@ -31,9 +31,21 @@ class ClusterConfig:
     #                              (False = rebuild per query, PR-2 path)
     transport: str = "local"     # backend="sharded": how the coordinator
     #                              reaches its shards — "local" (in-process,
-    #                              zero-copy) or "process" (one spawned
+    #                              zero-copy), "process" (one spawned
     #                              server process per shard, wire protocol
-    #                              over sockets; GIL-free update fan-out)
+    #                              over a socketpair; GIL-free update
+    #                              fan-out) or "tcp" (same protocol over a
+    #                              stream socket with timeouts, retries and
+    #                              auth — reconnectable, cross-host capable)
+    replicas: int = 0            # backend="sharded": replicas per shard
+    #                              lane, fed by deterministic update
+    #                              replay; on a dead primary the
+    #                              coordinator promotes a replica instead
+    #                              of erroring (0 = no fault tolerance)
+    rpc_timeout_s: float = 30.0  # wire transports: per-request deadline —
+    #                              a request that gets no response within
+    #                              this window fails (and, on "tcp",
+    #                              retries) instead of hanging forever
     obs: bool = False            # observability: metrics registry + trace
     #                              spans (repro.obs).  Off by default; the
     #                              null instruments keep un-instrumented
@@ -56,12 +68,17 @@ class ClusterConfig:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
         if self.workers < 0:
             raise ValueError(f"workers must be >= 0, got {self.workers}")
+        if self.replicas < 0:
+            raise ValueError(f"replicas must be >= 0, got {self.replicas}")
+        if self.rpc_timeout_s <= 0:
+            raise ValueError(
+                f"rpc_timeout_s must be > 0, got {self.rpc_timeout_s}")
         if self.inner_backend == "sharded":
             raise ValueError("inner_backend cannot itself be 'sharded'")
-        if self.transport not in ("local", "process"):
+        if self.transport not in ("local", "process", "tcp"):
             raise ValueError(
                 f"unknown transport {self.transport!r} "
-                "(expected 'local' or 'process')"
+                "(expected 'local', 'process' or 'tcp')"
             )
 
     def replace(self, **changes: Any) -> "ClusterConfig":

@@ -32,9 +32,13 @@ def main(argv=None):
                     help="shard the request-clustering window across S "
                          "LSH key ranges")
     ap.add_argument("--cluster-transport", default="local",
-                    choices=("local", "process"),
-                    help="how the clustering shards are reached: in-process "
-                         "or spawned per-shard server processes")
+                    choices=("local", "process", "tcp"),
+                    help="how the clustering shards are reached: in-process, "
+                         "spawned per-shard server processes, or TCP with "
+                         "timeouts/retries/auth")
+    ap.add_argument("--cluster-replicas", type=int, default=0,
+                    help="replicas per clustering shard (failover instead "
+                         "of failure when a shard worker dies)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -45,7 +49,8 @@ def main(argv=None):
     eng = ServingEngine(model, params, batch=args.batch, kv_len=args.kv_len,
                         cluster_requests=args.cluster, embed_dim=8,
                         cluster_shards=args.cluster_shards,
-                        cluster_transport=args.cluster_transport)
+                        cluster_transport=args.cluster_transport,
+                        cluster_replicas=args.cluster_replicas)
 
     rng = np.random.default_rng(0)
     t0 = time.time()

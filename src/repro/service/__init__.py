@@ -14,15 +14,27 @@ length-prefixed npz framing codec:
   * :class:`~repro.service.service.ClusterService` — any registered
     ClusterIndex backend served behind the protocol;
   * :class:`~repro.service.transport.ShardClient` — the client ABC with
-    two transports: ``LocalTransport`` (in-process, zero-copy) and
+    three transports: ``LocalTransport`` (in-process, zero-copy),
     ``ProcessTransport`` (spawned per-shard server processes, GIL-free
-    update fan-out).  ``ClusterConfig(transport="local"|"process")``
-    selects one for ``backend="sharded"``; cross-host sharding is "write
-    a TCP ``request()``", not a redesign.
+    update fan-out) and ``TcpTransport`` (reconnectable stream socket
+    with timeouts, bounded-backoff retries, token auth and exactly-once
+    mutations via the op-sequence dedup header).
+    ``ClusterConfig(transport="local"|"process"|"tcp")`` selects one for
+    ``backend="sharded"``;
+  * :class:`~repro.service.replica.ReplicatedClient` — a fault-tolerant
+    lane of ``1 + R`` members per shard (``ClusterConfig.replicas``):
+    deterministic update replay keeps replicas bit-identical, a dead
+    primary is promoted away, dead members respawn + resync in the
+    background;
+  * :class:`~repro.service.chaos.ChaosClient` — fault injection
+    (drop/delay/close/corrupt at the Nth request) around any client,
+    plus the worker's ``--die-after N`` crash knob, so the recovery
+    machinery is tested against real failures.
 """
 
+from .chaos import CHAOS_MODES, ChaosClient  # noqa: F401
 from .codec import decode, encode, read_frame, write_frame  # noqa: F401
-from .messages import MESSAGE_TYPES, Message  # noqa: F401
+from .messages import MESSAGE_TYPES, MUTATION_KINDS, Message  # noqa: F401
 from .messages import (  # noqa: F401
     CheckInvariantsReq,
     ComponentOfBatchReq,
@@ -50,6 +62,7 @@ from .messages import (  # noqa: F401
     ValueResp,
     ValuesResp,
 )
+from .replica import ReplicatedClient, connect_lanes  # noqa: F401
 from .service import ClusterService, serve_connection  # noqa: F401
 from .transport import (  # noqa: F401
     TRANSPORTS,
@@ -57,5 +70,6 @@ from .transport import (  # noqa: F401
     ProcessTransport,
     ShardClient,
     ShardUnavailableError,
+    TcpTransport,
     connect_shards,
 )

@@ -69,6 +69,8 @@ def encode(msg: Message) -> bytes:
         meta["__trace__"] = msg.trace_ctx
     if msg.span_summary:
         meta["__spans__"] = msg.span_summary
+    if msg.op_seq is not None:
+        meta["__seq__"] = list(msg.op_seq)
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8)
     buf = io.BytesIO()
@@ -82,6 +84,7 @@ def decode(payload: bytes) -> Message:
         kind = meta.pop("kind")
         trace_ctx = meta.pop("__trace__", None)
         span_summary = meta.pop("__spans__", None)
+        op_seq = meta.pop("__seq__", None)
         try:
             cls = MESSAGE_TYPES[kind]
         except KeyError:
@@ -105,6 +108,8 @@ def decode(payload: bytes) -> Message:
             msg.trace_ctx = trace_ctx
         if span_summary is not None:
             msg.span_summary = span_summary
+        if op_seq is not None:
+            msg.op_seq = (str(op_seq[0]), int(op_seq[1]))
         return msg
 
 

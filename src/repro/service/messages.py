@@ -39,6 +39,16 @@ import numpy as np
 
 MESSAGE_TYPES: Dict[str, Type["Message"]] = {}
 
+#: request kinds that change shard state.  A retrying transport must not
+#: re-apply these blindly: it stamps them with a per-client monotonic
+#: op-sequence number (``Message.op_seq``) and the service deduplicates —
+#: a redelivered mutation returns the cached response instead of applying
+#: twice.  ``drain_deltas`` is included because draining consumes the
+#: change journal: a lost response must replay from the cache, not drain
+#: a second (empty) time.
+MUTATION_KINDS = frozenset(
+    {"insert_batch", "delete_batch", "restore", "drain_deltas"})
+
 
 def register_message(cls: Type["Message"]) -> Type["Message"]:
     """Class decorator: key ``cls`` by its ``kind`` for the codec."""
@@ -61,6 +71,12 @@ class Message:
     #: message encodes to bit-identical wire bytes.
     trace_ctx: ClassVar[Optional[Dict[str, int]]] = None
     span_summary: ClassVar[Optional[list]] = None
+    #: exactly-once sidecar for retried mutations: ``(client_id, n)``
+    #: where ``n`` is the sender's monotonic op-sequence number.  Rides
+    #: the codec's JSON header under the reserved ``__seq__`` key only
+    #: when set (same bit-identical-when-unused contract as the trace
+    #: sidecar); the service's dedup table is keyed by it.
+    op_seq: ClassVar[Optional[Tuple[str, int]]] = None
     #: field -> required numpy dtype (coerced in __post_init__)
     _dtypes: ClassVar[Dict[str, Any]] = {}
     #: field -> tuple of permitted fixed dtypes, for payloads whose width
@@ -239,9 +255,18 @@ class StatsResp(Message):
 @register_message
 @dataclasses.dataclass
 class HelloReq(Message):
-    """Handshake: capability discovery + liveness check in one trip."""
+    """Handshake: capability discovery + liveness check in one trip.
+
+    On an authenticated listener (worker ``--token``) the hello must be
+    the connection's first message and carry the matching ``token``.
+    ``client_id`` identifies the caller's mutation-dedup lane: the
+    response echoes the highest op-sequence number the server has applied
+    for it, so a reconnecting client knows whether an in-flight mutation
+    landed before the connection died."""
 
     kind = "hello"
+    token: Optional[str] = None
+    client_id: Optional[str] = None
 
 
 @register_message
@@ -251,6 +276,7 @@ class HelloResp(Message):
     backend: str = ""
     native_component_queries: bool = False
     n_live: int = 0
+    last_seq: int = -1  # highest applied op_seq for req.client_id
 
 
 @register_message

@@ -18,7 +18,7 @@ without hashing the batch itself.
 from __future__ import annotations
 
 import socket
-from typing import Callable, Dict, Type
+from typing import Callable, Dict, Optional, Type
 
 import numpy as np
 
@@ -35,6 +35,7 @@ WIRE_ERRORS: Dict[str, Type[BaseException]] = {
     "TypeError": TypeError,
     "NotImplementedError": NotImplementedError,
     "AssertionError": AssertionError,
+    "PermissionError": PermissionError,
 }
 
 
@@ -65,9 +66,28 @@ class ClusterService:
             m.CheckInvariantsReq: self._check_invariants,
             m.ShutdownReq: lambda req: m.OkResp(n_live=len(self.index)),
         }
+        # mutation dedup: highest applied op_seq (and its response) per
+        # client id.  A retrying transport redelivers a mutation with the
+        # same sequence number after a reconnect; replaying the cached
+        # response instead of re-dispatching makes delivery exactly-once.
+        self._applied_seq: Dict[str, int] = {}
+        self._applied_resp: Dict[str, m.Message] = {}
 
     # ------------------------------------------------------------------ #
     def handle(self, req: m.Message) -> m.Message:
+        seq = req.op_seq
+        if seq is not None and req.kind in m.MUTATION_KINDS:
+            cid, n = str(seq[0]), int(seq[1])
+            if n <= self._applied_seq.get(cid, -1):
+                self.obs.counter("rpc.dedup_hits").inc()
+                return self._applied_resp[cid]
+            resp = self._handle(req)
+            self._applied_seq[cid] = n
+            self._applied_resp[cid] = resp
+            return resp
+        return self._handle(req)
+
+    def _handle(self, req: m.Message) -> m.Message:
         try:
             fn = self._dispatch[type(req)]
         except KeyError:
@@ -102,11 +122,13 @@ class ClusterService:
 
     # ------------------------------------------------------------------ #
     def _hello(self, req: m.HelloReq) -> m.HelloResp:
+        last = (self._applied_seq.get(req.client_id, -1)
+                if req.client_id else -1)
         return m.HelloResp(
             backend=self.index.cfg.backend,
             native_component_queries=bool(
                 self.index.native_component_queries),
-            n_live=len(self.index))
+            n_live=len(self.index), last_seq=last)
 
     def _insert_batch(self, req: m.InsertBatchReq) -> m.InsertBatchResp:
         ids = self.index.insert_batch(req.X, ids=[int(i) for i in req.ids])
@@ -168,19 +190,38 @@ class ClusterService:
         return m.OkResp(n_live=len(self.index))
 
 
-def serve_connection(service: ClusterService, sock: socket.socket) -> None:
+def serve_connection(service: ClusterService, sock: socket.socket,
+                     auth_token: Optional[str] = None) -> bool:
     """Frame loop: decode request, handle, encode response; exceptions —
     including an undecodable frame, e.g. an unknown message kind from a
     version-skewed peer — become ErrorResp frames (first arg when
     JSON-able, else ``str``), so a bad request never kills the shard.
-    Returns on ShutdownReq or EOF."""
+
+    With ``auth_token`` set, the connection's first message must be a
+    HelloReq carrying the matching token; anything else gets one
+    ``PermissionError`` frame and the connection closes (a TCP listener
+    keeps accepting — a failed login never kills the worker).
+
+    Returns True when a ShutdownReq ended the loop (the server should
+    exit), False on EOF (a reconnecting client may come back)."""
+    authed = auth_token is None
     while True:
         payload = read_frame(sock)
         if payload is None:
-            return
+            return False
         req = None
         try:
             req = decode(payload)
+            if not authed:
+                if (isinstance(req, m.HelloReq)
+                        and req.token == auth_token):
+                    authed = True
+                else:
+                    write_frame(sock, encode(m.ErrorResp(
+                        etype="PermissionError",
+                        arg="authentication required: send HelloReq with "
+                            "the worker's token first")))
+                    return False
             resp = service.handle(req)
         except BaseException as e:  # noqa: BLE001 — everything crosses the wire
             arg = e.args[0] if (e.args and isinstance(
@@ -188,4 +229,4 @@ def serve_connection(service: ClusterService, sock: socket.socket) -> None:
             resp = m.ErrorResp(etype=type(e).__name__, arg=arg)
         write_frame(sock, encode(resp))
         if isinstance(req, m.ShutdownReq):
-            return
+            return True

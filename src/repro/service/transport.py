@@ -5,7 +5,7 @@ talks to — typed convenience methods built over a single ``request(req) ->
 resp`` primitive, plus wire counters (``bytes_sent`` / ``bytes_received``
 / ``round_trips``) so benchmarks can report protocol overhead.
 
-Two transports ship:
+Three transports ship:
 
   * :class:`LocalTransport` — the index lives in-process; ``request`` is
     a direct ``ClusterService.handle`` call (no codec, no copy) and the
@@ -19,13 +19,22 @@ Two transports ship:
     truly in parallel (the coordinator's fan-out threads just block on
     sockets, releasing the GIL) — the ~S× update speedup the in-process
     thread pool can never reach.
+  * :class:`TcpTransport` — the same framed protocol over a stream
+    socket, built for fleets where connections fail independently of
+    workers: connect/request timeouts (``ClusterConfig.rpc_timeout_s``),
+    bounded exponential-backoff retries with transparent reconnection,
+    token auth on the hello handshake, and exactly-once mutations via the
+    per-client op-sequence dedup header (see
+    :data:`~repro.service.messages.MUTATION_KINDS`).  By default it
+    spawns a local TCP worker; pass ``addr=(host, port)`` to reach a
+    worker on another host.
 
 A worker that dies (crash, OOM, kill) surfaces as
 :class:`ShardUnavailableError` on the next request — never a hang: a dead
-peer closes the socket, which reads as EOF at the frame layer.
-
-Cross-host sharding is a third transport away: implement ``request`` over
-TCP and nothing above this module changes.
+peer closes the socket (EOF at the frame layer), a wedged one trips the
+per-op deadline.  ``ShardUnavailableError`` carries the retry/timeout
+detail in its message so callers and tests can assert on what the
+transport actually did before giving up.
 """
 
 from __future__ import annotations
@@ -34,9 +43,11 @@ import abc
 import contextlib
 import json
 import os
+import secrets
 import socket
 import subprocess
 import sys
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -53,11 +64,44 @@ from . import service as _service
 
 
 class ShardUnavailableError(RuntimeError):
-    """A shard's server process is gone (exited, crashed, or unreachable)."""
+    """A shard's server process is gone (exited, crashed, or unreachable).
+
+    ``args[0]`` names the shard and the failure detail — including, for
+    deadline failures, how long the transport waited and how many retries
+    it burned — so a caller can assert "timed out, N retries" without
+    string-parsing logs."""
 
     def __init__(self, shard: int, detail: str):
         super().__init__(f"shard {shard} unavailable: {detail}")
         self.shard = shard
+        self.detail = detail
+
+
+# ---------------------------------------------------------------------- #
+# worker spawn/reap helpers (shared by the out-of-process transports)
+# ---------------------------------------------------------------------- #
+def _worker_env() -> Dict[str, str]:
+    """Environment for a spawned worker: it must resolve ``repro``
+    exactly as this process does (__path__, not __file__: repro is a
+    namespace package)."""
+    env = dict(os.environ)
+    import repro
+    pkg_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = pkg_root + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def _reap(proc: Optional[subprocess.Popen], grace_s: float = 5.0) -> None:
+    """Wait for a worker to exit, escalating to kill() on a stuck one;
+    never raises, safe to call twice."""
+    if proc is None:
+        return
+    try:
+        proc.wait(timeout=grace_s)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        proc.wait()
 
 
 class ShardClient(abc.ABC):
@@ -233,26 +277,22 @@ class ProcessTransport(ShardClient):
                  timeout: Optional[float] = None, obs: Obs = NULL_OBS):
         super().__init__(shard_id, obs=obs)
         self._cfg = cfg
+        # per-op deadline: a wedged (not just dead) worker must surface
+        # as ShardUnavailableError, never a hang
+        self._timeout = float(cfg.rpc_timeout_s if timeout is None
+                              else timeout)
+        self._closed = False
         parent, child = socket.socketpair()
         try:
-            env = dict(os.environ)
-            # the worker must resolve `repro` exactly as this process does
-            # (__path__, not __file__: repro is a namespace package)
-            import repro
-            pkg_root = os.path.dirname(
-                os.path.abspath(list(repro.__path__)[0]))
-            env["PYTHONPATH"] = pkg_root + (
-                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
             self._proc = subprocess.Popen(
                 [sys.executable, "-m", "repro.service.worker",
                  "--fd", str(child.fileno()),
                  "--config", json.dumps(cfg.to_dict()),
                  "--proc", f"shard{shard_id}"],
-                pass_fds=(child.fileno(),), env=env)
+                pass_fds=(child.fileno(),), env=_worker_env())
         finally:
             child.close()
-        if timeout is not None:
-            parent.settimeout(timeout)
+        parent.settimeout(self._timeout)
         self._sock: Optional[socket.socket] = parent
 
     # ------------------------------------------------------------------ #
@@ -283,6 +323,10 @@ class ProcessTransport(ShardClient):
         try:
             self.bytes_sent += write_frame(self._sock, encode(req))
             payload = read_frame(self._sock)
+        except socket.timeout as e:
+            raise self._gone(
+                f"request timed out after {self._timeout}s "
+                f"(rpc_timeout_s), 0 retries") from e
         except (OSError, EOFError) as e:
             raise self._gone(str(e) or type(e).__name__) from e
         if payload is None:
@@ -295,21 +339,23 @@ class ProcessTransport(ShardClient):
         return resp
 
     def close(self) -> None:
-        sock, self._sock = self._sock, None
-        if sock is None:
+        """Shut the worker down; never raises, never hangs, and a second
+        invocation is a no-op.  A worker that ignores the shutdown frame
+        (or outlives the 5s grace period) is killed and reaped."""
+        if self._closed:
             return
-        try:
-            write_frame(sock, encode(m.ShutdownReq()))
-            read_frame(sock)
-        except (OSError, EOFError):
-            pass
-        finally:
-            sock.close()
-        try:
-            self._proc.wait(timeout=5)
-        except subprocess.TimeoutExpired:
-            self._proc.kill()
-            self._proc.wait()
+        self._closed = True
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.settimeout(5.0)
+                write_frame(sock, encode(m.ShutdownReq()))
+                read_frame(sock)
+            except (OSError, EOFError):
+                pass
+            finally:
+                sock.close()
+        _reap(self._proc)
 
     def __del__(self):  # backstop: never leak worker processes
         try:
@@ -318,7 +364,217 @@ class ProcessTransport(ShardClient):
             pass
 
 
-TRANSPORTS = {"local": LocalTransport, "process": ProcessTransport}
+class TcpTransport(ShardClient):
+    """Shard over TCP: framed protocol + timeouts, retries, auth, dedup.
+
+    The connection is an expendable resource: any send/receive failure —
+    EOF, reset, or the per-op deadline (``cfg.rpc_timeout_s``) — drops
+    the socket and the transport reconnects with exponential backoff, up
+    to ``retries`` times.  Each (re)connect runs the hello handshake:
+    token auth plus the dedup exchange, where the server echoes the
+    highest op-sequence number it has applied for this client.  Idempotent
+    requests are simply re-sent; mutations are re-sent with their original
+    ``op_seq`` header, so a mutation that *did* land before the connection
+    died is answered from the server's dedup cache instead of applying
+    twice — exactly-once, not at-least-once.
+
+    With ``addr=None`` the transport spawns its own worker on
+    ``127.0.0.1`` (ephemeral port, fresh auth token) — the local-fleet
+    configuration the coordinator uses.  Pass ``addr=(host, port)`` and
+    the worker's ``token`` to reach a shard served elsewhere; the
+    transport then owns only the connection, not the process.
+    """
+
+    RETRIES = 3           # reconnect attempts after the first failure
+    BACKOFF_S = 0.05      # first backoff; doubles per retry
+    BACKOFF_MAX_S = 1.0
+    CONNECT_TIMEOUT_S = 5.0
+
+    def __init__(self, cfg: ClusterConfig, shard_id: int = 0,
+                 obs: Obs = NULL_OBS,
+                 addr: Optional[Tuple[str, int]] = None,
+                 token: Optional[str] = None,
+                 retries: Optional[int] = None,
+                 die_after: int = 0):
+        super().__init__(shard_id, obs=obs)
+        self._cfg = cfg
+        self._timeout = float(cfg.rpc_timeout_s)
+        self._retries = self.RETRIES if retries is None else int(retries)
+        # dedup identity: unique per client *instance* — a respawned
+        # coordinator is a new client with a fresh sequence space
+        self._client_id = f"{os.getpid():x}.{secrets.token_hex(4)}.s{shard_id}"
+        self._next_seq = 0
+        self._server_last_seq = -1
+        self._closed = False
+        self._sock: Optional[socket.socket] = None
+        self._proc: Optional[subprocess.Popen] = None
+        # bound once so the counter appears (at zero) in any instrumented
+        # snapshot — the fleet dashboards key on it existing
+        self._c_retries = obs.counter("rpc.retries")
+        self._c_reconnects = obs.counter("rpc.reconnects")
+        if addr is None:
+            token = token or secrets.token_hex(16)
+            self._proc, addr = self._spawn(cfg, shard_id, token, die_after)
+        self._addr = addr
+        self._token = token
+        self._connect()
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _spawn(cfg: ClusterConfig, shard_id: int, token: str,
+               die_after: int) -> Tuple[subprocess.Popen, Tuple[str, int]]:
+        """Spawn a TCP worker on an ephemeral port and learn the port
+        from its WORKER_PORT announcement."""
+        args = [sys.executable, "-m", "repro.service.worker",
+                "--listen", "127.0.0.1:0",
+                "--config", json.dumps(cfg.to_dict()),
+                "--proc", f"shard{shard_id}",
+                "--token", token]
+        if die_after > 0:
+            args += ["--die-after", str(die_after)]
+        proc = subprocess.Popen(args, env=_worker_env(),
+                                stdout=subprocess.PIPE, text=True)
+        line = proc.stdout.readline() if proc.stdout else ""
+        if not line.startswith("WORKER_PORT="):
+            _reap(proc)
+            raise ShardUnavailableError(
+                shard_id, "worker failed to start (no port announcement; "
+                          f"exit code {proc.poll()})")
+        return proc, ("127.0.0.1", int(line.split("=", 1)[1]))
+
+    def _disconnect(self) -> None:
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _connect(self) -> None:
+        """Dial + authenticate + dedup handshake; raises OSError/EOFError
+        on connection trouble (retryable) and PermissionError on an auth
+        reject (not retryable — a bad token will not heal)."""
+        sock = socket.create_connection(self._addr,
+                                        timeout=self.CONNECT_TIMEOUT_S)
+        sock.settimeout(self._timeout)
+        self._sock = sock
+        try:
+            hello = self._exchange(m.HelloReq(token=self._token,
+                                              client_id=self._client_id))
+        except BaseException:
+            self._disconnect()
+            raise
+        self._server_last_seq = int(hello.last_seq)
+
+    def _exchange(self, req: m.Message) -> m.Message:
+        """One frame each way on the live socket; no retry logic here."""
+        self.bytes_sent += write_frame(self._sock, encode(req))
+        payload = read_frame(self._sock)
+        if payload is None:
+            raise EOFError("connection closed by peer")
+        self.bytes_received += len(payload) + 8
+        self.round_trips += 1
+        resp = decode(payload)
+        if isinstance(resp, m.ErrorResp):
+            raise _service.WIRE_ERRORS.get(resp.etype, RuntimeError)(resp.arg)
+        return resp
+
+    # ------------------------------------------------------------------ #
+    def request(self, req: m.Message) -> m.Message:  # hot-path
+        # stamp mutations once — retries re-send the identical header, so
+        # the server can collapse duplicate deliveries
+        if req.kind in m.MUTATION_KINDS and req.op_seq is None:
+            req.op_seq = (self._client_id, self._next_seq)
+            self._next_seq += 1
+        if not self.obs.enabled:
+            return self._request_with_retries(req)
+        tracer = self.obs.tracer
+        with tracer.span(f"wire.shard{self.shard_id}", op=req.kind) as sp:
+            req.trace_ctx = sp.wire_ctx()
+            resp = self._request_with_retries(req)
+        if resp.span_summary:
+            tracer.ingest(resp.span_summary)
+            resp.span_summary = None
+        return resp
+
+    def _request_with_retries(self, req: m.Message) -> m.Message:
+        if self._closed:
+            raise ShardUnavailableError(self.shard_id, "transport closed")
+        attempts = 0
+        while True:
+            try:
+                if self._sock is None:
+                    self._c_reconnects.inc()
+                    self._connect()
+                return self._exchange(req)
+            except socket.timeout as e:
+                self._disconnect()
+                attempts += 1
+                self._fail_or_backoff(
+                    attempts, f"request timed out after {self._timeout}s",
+                    e)
+            except (OSError, EOFError) as e:
+                self._disconnect()
+                attempts += 1
+                self._fail_or_backoff(attempts,
+                                      str(e) or type(e).__name__, e)
+
+    def _fail_or_backoff(self, attempts: int, what: str,
+                         cause: BaseException) -> None:
+        """Give up with a named, detailed ShardUnavailableError — or
+        sleep the backoff and let the caller loop retry."""
+        proc = self._proc
+        if proc is not None and proc.poll() is not None:
+            # the worker itself is gone: reconnecting cannot succeed,
+            # fail fast instead of burning the retry budget
+            raise ShardUnavailableError(
+                self.shard_id,
+                f"worker exited with code {proc.poll()} ({what}, "
+                f"{attempts - 1} retries)") from cause
+        if attempts > self._retries:
+            raise ShardUnavailableError(
+                self.shard_id,
+                f"{what}; gave up after {attempts} attempts "
+                f"({attempts - 1} retries, "
+                f"rpc_timeout_s={self._timeout})") from cause
+        self._c_retries.inc()
+        time.sleep(min(self.BACKOFF_S * (2 ** (attempts - 1)),
+                       self.BACKOFF_MAX_S))
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        """Shut down the connection (and the worker, if this transport
+        spawned it); idempotent, never raises, never hangs."""
+        if self._closed:
+            return
+        self._closed = True
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            if self._proc is not None:  # we own the worker: ask it to exit
+                try:
+                    sock.settimeout(5.0)
+                    write_frame(sock, encode(m.ShutdownReq()))
+                    read_frame(sock)
+                except (OSError, EOFError):
+                    pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        if self._proc is not None:
+            if self._proc.stdout:
+                self._proc.stdout.close()
+            _reap(self._proc)
+
+    def __del__(self):  # backstop: never leak worker processes
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+TRANSPORTS = {"local": LocalTransport, "process": ProcessTransport,
+              "tcp": TcpTransport}
 
 
 def connect_shards(inner_cfg: ClusterConfig, n_shards: int,

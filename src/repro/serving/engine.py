@@ -50,6 +50,7 @@ class ServingEngine:
                  cluster_shards: int = 1,
                  cluster_workers: int = 0,
                  cluster_transport: str = "local",
+                 cluster_replicas: int = 0,
                  obs: Obs = NULL_OBS):
         self.model = model
         # serving telemetry: per-op latency + scheduler state gauges.
@@ -78,15 +79,18 @@ class ServingEngine:
         # cluster_shards > 1 shards the request-clustering window by LSH
         # key range (cluster_backend becomes the per-shard inner engine);
         # cluster_workers > 1 fans the per-shard sub-batches out on a
-        # thread pool, and cluster_transport="process" runs each shard as
-        # its own server process (GIL-free updates).  label() on the
-        # sharded backend is an incremental point query, so per-request
-        # labelling stays off the O(n) path.
+        # thread pool, and cluster_transport="process"/"tcp" runs each
+        # shard as its own server process (GIL-free updates).
+        # cluster_replicas > 0 backs every shard with that many replicas:
+        # a shard worker dying mid-serve fails over instead of failing
+        # requests.  label() on the sharded backend is an incremental
+        # point query, so per-request labelling stays off the O(n) path.
         self.clusterer = (
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
                                       backend=cluster_backend,
                                       workers=cluster_workers,
                                       transport=cluster_transport,
+                                      replicas=cluster_replicas,
                                       obs=obs.enabled)
                         .with_shards(cluster_shards))
             if cluster_requests else None

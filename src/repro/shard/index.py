@@ -16,6 +16,21 @@ goes through the wire protocol's :class:`~repro.service.ShardClient` —
     interpreters — true ~S× GIL-free update parallelism.  Insert
     responses piggyback the bucket-key digest that feeds the
     coordinator's bridge directory.
+  * ``"tcp"``: same protocol over a reconnectable stream socket, with
+    timeouts, retries and auth (see
+    :class:`~repro.service.transport.TcpTransport`).
+
+With ``cfg.replicas = R > 0`` each shard client is a fault-tolerant
+*lane* (:class:`~repro.service.replica.ReplicatedClient`): one primary
+plus R replicas kept bit-identical by deterministic update replay.  A
+dead primary is promoted away transparently (``failover.*`` counters);
+a dead lane member is respawned and resynced in the background.  With
+``replicas = 0`` a dead shard surfaces as
+:class:`~repro.service.transport.ShardUnavailableError`; the mutation
+paths reconcile partial fan-out failure first (insert rolls back the
+sub-batches that landed, delete applies bridge updates for exactly the
+shards that succeeded), so coordinator state never drifts from shard
+state.
 
 Mutations fan out per-shard — ``insert_batch`` splits a run into
 per-shard sub-batches, so device backends keep their one-kernel-per-run
@@ -64,7 +79,9 @@ from ..api.index import ClusterIndex
 from ..core.dynamic_dbscan import NOISE, check_unique_ids
 from ..core.hashing import GridLSH
 from ..obs import merge_snapshots, write_chrome
-from ..service.transport import ShardClient, connect_shards
+from ..service.replica import connect_lanes
+from ..service.transport import (ShardClient, ShardUnavailableError,
+                                 connect_shards)
 from .bridge import BoundaryBridge
 from .router import RebalancePlan, ShardRouter
 
@@ -86,10 +103,20 @@ class ShardedIndex(ClusterIndex):
         # a worker process serves a plain in-process engine
         self._inner_cfg = cfg.replace(backend=cfg.inner_backend,
                                       transport="local")
-        self._process = cfg.transport == "process"
+        # "remote" = the shard is behind a wire codec (process or tcp):
+        # route on table 0 only and let the shards hash in parallel
+        self._remote = cfg.transport != "local"
         self.obs.set_proc("coordinator")
-        self.clients: List[ShardClient] = connect_shards(
-            self._inner_cfg, cfg.shards, cfg.transport, obs=self.obs)
+        if cfg.replicas > 0:
+            # fault-tolerant lanes: each client is 1 primary + R replicas
+            # behind the same ShardClient surface, with promotion and
+            # background respawn+resync on member death
+            self.clients: List[ShardClient] = connect_lanes(
+                self._inner_cfg, cfg.shards, cfg.transport, cfg.replicas,
+                obs=self.obs)
+        else:
+            self.clients = connect_shards(
+                self._inner_cfg, cfg.shards, cfg.transport, obs=self.obs)
         try:
             self._init_rest(cfg)
         except Exception:
@@ -136,7 +163,7 @@ class ShardedIndex(ClusterIndex):
         if cfg.shards > 1:
             if cfg.workers and cfg.workers > 1:
                 n_workers = min(int(cfg.workers), cfg.shards)
-            elif self._process and not cfg.workers:
+            elif self._remote and not cfg.workers:
                 n_workers = cfg.shards
         self._pool: Optional[ThreadPoolExecutor] = (
             ThreadPoolExecutor(max_workers=n_workers,
@@ -212,27 +239,48 @@ class ShardedIndex(ClusterIndex):
     # ------------------------------------------------------------------ #
     # per-shard fan-out
     # ------------------------------------------------------------------ #
-    def _fanout(self, jobs: Dict[int, Callable[[], Any]]) -> Dict[int, Any]:
+    def _fanout(self, jobs: Dict[int, Callable[[], Any]],
+                return_exceptions: bool = False) -> Dict[int, Any]:
         """Run one job per shard, on the worker pool when it pays off.
 
         Shards never share inner state, so per-shard jobs are safe to run
         concurrently; results (and the first exception) are collected in
-        shard order, keeping the fan-out deterministic.  Instrumented
-        fan-outs time each job into that shard's RPC histogram (the
-        straggler signal) and submit under a copied contextvars context so
-        wire spans parent under the coordinator's op span even from pool
-        threads."""
+        shard order, keeping the fan-out deterministic.  With
+        ``return_exceptions`` a failing job's exception is *returned* in
+        its shard's slot instead of raised, so mutation paths can see
+        which shards applied their sub-batch and reconcile (roll back or
+        apply-what-succeeded) before surfacing the first error.
+        Instrumented fan-outs time each job into that shard's RPC
+        histogram (the straggler signal) and submit under a copied
+        contextvars context so wire spans parent under the coordinator's
+        op span even from pool threads."""
         if self.obs.enabled:
             jobs = {s: self._timed_job(self._h_rpc[s], fn)
                     for s, fn in jobs.items()}
         if self._pool is None or len(jobs) <= 1:
-            return {s: fn() for s, fn in jobs.items()}
+            if not return_exceptions:
+                return {s: fn() for s, fn in jobs.items()}
+            out: Dict[int, Any] = {}
+            for s, fn in jobs.items():
+                try:
+                    out[s] = fn()
+                except BaseException as e:
+                    out[s] = e
+            return out
         if self.obs.enabled:
             futures = {s: self._pool.submit(contextvars.copy_context().run, fn)
                        for s, fn in jobs.items()}
         else:
             futures = {s: self._pool.submit(fn) for s, fn in jobs.items()}
-        return {s: futures[s].result() for s in sorted(futures)}
+        if not return_exceptions:
+            return {s: futures[s].result() for s in sorted(futures)}
+        out = {}
+        for s in sorted(futures):
+            try:
+                out[s] = futures[s].result()
+            except BaseException as e:
+                out[s] = e
+        return out
 
     @staticmethod
     def _timed_job(hist, fn: Callable[[], Any]) -> Callable[[], Any]:
@@ -269,7 +317,7 @@ class ShardedIndex(ClusterIndex):
         # auto-id sequence) without copying the live-id set per call
         fresh: set = set()
         out: List[int] = []
-        nxt = self._next_idx
+        nxt0 = nxt = self._next_idx
         for j in range(n):
             idx = None if ids is None else ids[j]
             if idx is None:
@@ -282,7 +330,7 @@ class ShardedIndex(ClusterIndex):
         self._next_idx = nxt
         if n == 0:
             return out
-        if self._process:
+        if self._remote:
             # route on table 0 only; the shards hash in parallel and the
             # insert responses piggyback the bucket-key digest the bridge
             # directory is fed from
@@ -301,9 +349,14 @@ class ShardedIndex(ClusterIndex):
                 jobs[s] = (lambda s=s, rows=rows:
                            self.clients[s].insert_batch(
                                X[rows], ids=[out[j] for j in rows],
-                               want_digest=self._process))
-        results = self._fanout(jobs)
-        if self._process:
+                               want_digest=self._remote))
+        results = self._fanout(jobs, return_exceptions=True)
+        failed = {s: r for s, r in results.items()
+                  if isinstance(r, BaseException)}
+        if failed:
+            self._rollback_insert(results, by_shard, out, X, nxt0)
+            raise failed[min(failed)]
+        if self._remote:
             for s, rows in by_shard.items():
                 sub = self._digest_keys(results[s][1], self.cfg.t)
                 for pos, j in enumerate(rows):
@@ -315,6 +368,28 @@ class ShardedIndex(ClusterIndex):
                 self.bridge.insert(out[j], keys[j], s)
         self._cache = None
         return out
+
+    def _rollback_insert(self, results: Dict[int, Any],
+                         by_shard: Dict[int, np.ndarray],
+                         out: List[int], X: np.ndarray, nxt0: int) -> None:
+        """Compensate a partially applied insert fan-out: the shards that
+        did apply their sub-batch get a compensating delete and the
+        handle counter rewinds, so bridge/router/home state is exactly
+        what it was before the call (the bridge and home map are only
+        written after a fully successful fan-out, so they need no
+        undo)."""
+        for s, rows in by_shard.items():
+            if isinstance(results.get(s), BaseException):
+                continue
+            try:
+                self.clients[s].delete_batch([out[j] for j in rows])
+            except ShardUnavailableError:  # analysis: allow[FT001]
+                # double failure: this shard died between applying its
+                # sub-batch and the compensation.  Its lane already ran
+                # the failover path inside delete_batch; all that is left
+                # is to record that the rollback could not complete.
+                self.obs.counter("failover.rollback_failures").inc()
+        self._next_idx = nxt0
 
     def delete(self, idx: int) -> None:
         with self.obs.tracer.span("coord.delete"), \
@@ -339,14 +414,25 @@ class ShardedIndex(ClusterIndex):
         by_shard: Dict[int, List[int]] = {}
         for i in ids:
             by_shard.setdefault(self._home[i], []).append(i)
-        self._fanout({s: (lambda s=s, group=group:
-                          self.clients[s].delete_batch(group))
-                      for s, group in by_shard.items()})
+        results = self._fanout({s: (lambda s=s, group=group:
+                                    self.clients[s].delete_batch(group))
+                                for s, group in by_shard.items()},
+                               return_exceptions=True)
+        failed = sorted(s for s, r in results.items()
+                        if isinstance(r, BaseException))
+        # reconcile what actually happened: a shard that applied its
+        # sub-batch gets its bridge/home updates even when a sibling
+        # failed, so coordinator state tracks shard state exactly; the
+        # failed shard's points stay (its deletes never applied)
         for s, group in by_shard.items():
+            if s in failed:
+                continue
             for i in group:
                 self.bridge.delete(i, s)
                 del self._home[i]
         self._cache = None
+        if failed:
+            raise results[failed[0]]
 
     # ------------------------------------------------------------------ #
     # queries (global partition = inner partitions + bridge structure)
@@ -387,7 +473,7 @@ class ShardedIndex(ClusterIndex):
     def _batch_resolver(self):
         # per-point resolution is already zero-copy on the local
         # transport; only remote shards benefit from batching
-        return self._comp_of_batch if self._process else None
+        return self._comp_of_batch if self._remote else None
 
     def _all_labels(self) -> Dict[int, int]:
         if self._cache is None:
@@ -550,6 +636,16 @@ class ShardedIndex(ClusterIndex):
     # ------------------------------------------------------------------ #
     # diagnostics
     # ------------------------------------------------------------------ #
+    def check_health(self) -> None:
+        """Probe every shard lane and run its deadline-based failover
+        path (promote a dead primary, evict overdue members, kick the
+        background respawn).  A serving loop calls this from its idle
+        path; it is a no-op for plain single-member transports."""
+        for c in self.clients:
+            probe = getattr(c, "check_health", None)
+            if probe is not None:
+                probe()
+
     def check_invariants(self) -> None:
         n_live = 0
         for s, client in enumerate(self.clients):
@@ -625,7 +721,9 @@ class ShardedIndex(ClusterIndex):
         out: Dict[str, int] = {
             "shards": self.cfg.shards,
             "workers": self.cfg.workers,
-            "process_transport": int(self._process),
+            "replicas": self.cfg.replicas,
+            "process_transport": int(self.cfg.transport == "process"),
+            "tcp_transport": int(self.cfg.transport == "tcp"),
             "incremental_merge": int(self._incremental),
             "n_boundary_buckets": self.bridge.n_boundary_buckets,
             "n_interesting_buckets": len(self.bridge.interesting),

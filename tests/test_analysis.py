@@ -23,6 +23,7 @@ import pytest
 
 from repro.analysis import cli
 from repro.analysis.concurrency_pass import ConcurrencyGuards
+from repro.analysis.fault_pass import FaultToleranceGuards
 from repro.analysis.hotpath_pass import HotPathPurity
 from repro.analysis.protocol_pass import ProtocolExhaustiveness
 from repro.analysis.obs_pass import ObsDiscipline
@@ -584,6 +585,89 @@ class TestObsDiscipline:
                 return t
         """})
         assert ObsDiscipline().run(project) == []
+
+
+class TestFaultToleranceGuards:
+    def test_swallowed_shard_unavailable_is_flagged(self, tmp_path):
+        project = make_project(tmp_path, {"shard/index.py": """\
+            def fanout(clients, req):
+                out = []
+                for c in clients:
+                    try:
+                        out.append(c.request(req))
+                    except ShardUnavailableError:
+                        out.append(None)  # dead shard -> wrong answers
+                return out
+        """})
+        assert rules(FaultToleranceGuards().run(project)) == ["FT001"]
+
+    def test_reraise_and_failover_path_are_clean(self, tmp_path):
+        project = make_project(tmp_path, {"service/replica.py": """\
+            class Lane:
+                def mutate(self, req):
+                    try:
+                        return self.primary.request(req)
+                    except ShardUnavailableError:
+                        self._fail_member(self.primary)  # promote + evict
+                        return self.primary.request(req)
+
+                def query(self, req):
+                    try:
+                        return self.primary.request(req)
+                    except ShardUnavailableError as e:
+                        raise RuntimeError("lane dead") from e
+        """})
+        assert FaultToleranceGuards().run(project) == []
+
+    def test_tuple_clause_and_dotted_name_are_matched(self, tmp_path):
+        project = make_project(tmp_path, {"service/transport.py": """\
+            def roundtrip(sock, req):
+                try:
+                    return exchange(sock, req)
+                except (OSError, transport.ShardUnavailableError):
+                    return None
+        """})
+        assert rules(FaultToleranceGuards().run(project)) == ["FT001"]
+
+    def test_nested_handler_does_not_vouch_for_outer(self, tmp_path):
+        # the inner OSError handler raises, but the *outer*
+        # ShardUnavailableError body still swallows
+        project = make_project(tmp_path, {"shard/router.py": """\
+            def route(c, req):
+                try:
+                    return c.request(req)
+                except ShardUnavailableError:
+                    try:
+                        c.close()
+                    except OSError:
+                        raise
+                    return None
+        """})
+        # the close() try/except raising still counts as the outer body
+        # raising only if it is in the outer body — it is nested, and its
+        # Raise belongs to the inner handler, so FT001 fires
+        assert rules(FaultToleranceGuards().run(project)) == ["FT001"]
+
+    def test_scope_is_service_and_shard_only(self, tmp_path):
+        project = make_project(tmp_path, {"serving/engine.py": """\
+            def submit(c, req):
+                try:
+                    return c.request(req)
+                except ShardUnavailableError:
+                    return None  # benchmarks/serving may degrade
+        """})
+        assert FaultToleranceGuards().run(project) == []
+
+    def test_suppression_pragma(self, tmp_path):
+        project = make_project(tmp_path, {"shard/index.py": """\
+            def rollback(survivors, ids):
+                for c in survivors:
+                    try:
+                        c.delete_batch(ids)
+                    except ShardUnavailableError:  # analysis: allow[FT001]
+                        pass  # double failure: counter is the record
+        """})
+        assert FaultToleranceGuards().run(project) == []
 
 
 # ---------------------------------------------------------------------- #

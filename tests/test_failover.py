@@ -1,0 +1,340 @@
+"""Fault-tolerance tests (PR 8): TCP transport semantics (timeouts,
+retries, token auth, exactly-once mutations), replicated shard lanes
+with coordinator failover, the chaos harness, and partial fan-out
+rollback.  The governing oracle is the same as PR 5's: whatever faults
+are injected, a run that *reports* success must be bit-identical to the
+fault-free in-process run of the same stream."""
+
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ClusterConfig, Insert, build_index
+from repro.data import blobs
+from repro.obs import Obs
+from repro.service import (
+    ChaosClient,
+    HelloResp,
+    LocalTransport,
+    ProcessTransport,
+    ShardUnavailableError,
+    TcpTransport,
+    connect_shards,
+    decode,
+    encode,
+    read_frame,
+    write_frame,
+)
+
+from test_service import cfg_for, interleaved_chunks
+
+
+def inner_cfg(**kw):
+    """A per-shard inner config, as a worker process would receive it."""
+    base = dict(d=4, k=6, t=6, eps=0.45, seed=0, backend="dynamic")
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+# ---------------------------------------------------------------------- #
+# TCP transport: oracle, auth, dedup, deadlines
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("shards", [1, 2])
+def test_tcp_transport_is_bit_identical_to_local(shards):
+    chunks, _ = interleaved_chunks(n=150, d=4, seed=shards)
+    loc = build_index(cfg_for(shards, "local"))
+    tcp = build_index(cfg_for(shards, "tcp"))
+    try:
+        for chunk in chunks:
+            assert loc.apply(chunk) == tcp.apply(chunk)
+        assert tcp.labels() == loc.labels()
+        tcp.check_invariants()
+    finally:
+        loc.close()
+        tcp.close()
+
+
+def test_tcp_auth_reject_is_permission_error_not_retried():
+    good = TcpTransport(inner_cfg(), shard_id=0)
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(PermissionError):
+            TcpTransport(inner_cfg(), shard_id=0, addr=good._addr,
+                         token="wrong-token")
+        # a bad token will not heal: rejected on the handshake, no
+        # backoff-retry loop (which would take >= 3 * BACKOFF_S)
+        assert time.perf_counter() - t0 < TcpTransport.CONNECT_TIMEOUT_S
+        # the worker survives an auth reject and keeps serving the
+        # authenticated client
+        assert good.ids() == []
+    finally:
+        good.close()
+
+
+def test_tcp_mutation_dedup_is_exactly_once():
+    import repro.service.messages as m
+
+    X, _ = blobs(n=6, d=4, n_clusters=2, cluster_std=0.2, seed=0)
+    t = TcpTransport(inner_cfg(), shard_id=0)
+    try:
+        req = m.InsertBatchReq(X=X, ids=list(range(6)), want_digest=False)
+        first = t.request(req)
+        # the transport stamped the mutation once; re-sending the same
+        # stamped frame (what a post-reconnect retry does) must be
+        # answered from the server's dedup cache, not applied twice
+        assert req.op_seq is not None
+        replay = t.request(req)
+        assert list(replay.ids) == list(first.ids)
+        assert replay.n_live == first.n_live
+        assert sorted(t.ids()) == list(range(6))
+    finally:
+        t.close()
+
+
+def test_tcp_retries_through_a_dropped_connection():
+    X, _ = blobs(n=40, d=4, n_clusters=2, cluster_std=0.2, seed=1)
+    loc = build_index(inner_cfg())
+    t = TcpTransport(inner_cfg(), shard_id=0, obs=Obs())
+    try:
+        t.insert_batch(X[:20], ids=list(range(20)))
+        loc.insert_batch(X[:20], ids=list(range(20)))
+        t._sock.close()  # connection dies between requests
+        t.insert_batch(X[20:], ids=list(range(20, 40)))
+        loc.insert_batch(X[20:], ids=list(range(20, 40)))
+        assert t.labels() == loc.labels()
+        assert t._c_reconnects.value >= 1
+    finally:
+        t.close()
+        loc.close()
+
+
+def test_tcp_timeout_surfaces_with_retry_detail_within_deadline():
+    """A server that accepts + authenticates but never answers requests
+    must produce a ShardUnavailableError whose detail names the timeout
+    and the retry count — within the configured deadline, never a hang."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    stop = threading.Event()
+
+    def black_hole():
+        srv.settimeout(0.25)
+        conns = []
+        while not stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            conns.append(conn)
+            hello = decode(read_frame(conn))
+            assert hello.kind == "hello"
+            write_frame(conn, encode(HelloResp()))
+            # ...and then read forever, answering nothing
+        for c in conns:
+            c.close()
+
+    th = threading.Thread(target=black_hole, daemon=True)
+    th.start()
+    cfg = inner_cfg(rpc_timeout_s=0.2)
+    t = TcpTransport(cfg, shard_id=0, addr=srv.getsockname(), token="x",
+                     retries=1, obs=Obs())
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(ShardUnavailableError) as ei:
+            t.labels()
+        elapsed = time.perf_counter() - t0
+        detail = ei.value.args[0]
+        assert "timed out" in detail and "retries" in detail
+        # initial attempt + 1 retry, each bounded by rpc_timeout_s, plus
+        # one backoff sleep and the reconnect handshake
+        assert elapsed < 5.0
+        assert t._c_retries.value >= 1
+    finally:
+        stop.set()
+        th.join(timeout=5)
+        t.close()
+        srv.close()
+
+
+def test_worker_die_after_crashes_on_schedule():
+    # --die-after N: the worker serves N requests (hello included) and
+    # exits hard before the next one — the crash knob the chaos harness
+    # builds on.  The transport must fail fast, not retry a corpse.
+    t = TcpTransport(inner_cfg(), shard_id=0, die_after=3)
+    try:
+        t.ids()  # request 2 (hello was 1)
+        t0 = time.perf_counter()
+        with pytest.raises(ShardUnavailableError, match="exited"):
+            for _ in range(3):
+                t.ids()
+        assert time.perf_counter() - t0 < 10.0
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------- #
+# close() lifecycle
+# ---------------------------------------------------------------------- #
+def test_process_transport_close_is_idempotent_even_after_a_kill():
+    clients = connect_shards(inner_cfg(), 2, "process")
+    healthy, doomed = clients
+    try:
+        assert healthy.ids() == []
+        doomed._proc.kill()
+        doomed._proc.wait()
+    finally:
+        for c in clients:
+            c.close()  # dead worker: escalation path, no exception
+            c.close()  # second invocation is a no-op
+    assert healthy._proc.poll() is not None
+    with pytest.raises(ShardUnavailableError):
+        healthy.ids()
+
+
+# ---------------------------------------------------------------------- #
+# replica lanes: deterministic replay, promotion, resync
+# ---------------------------------------------------------------------- #
+def test_replica_lane_is_bit_identical_to_local_oracle():
+    chunks, _ = interleaved_chunks(n=150, d=4, seed=3)
+    loc = build_index(cfg_for(2, "local", seed=3))
+    rep = build_index(cfg_for(2, "process", seed=3, replicas=1))
+    try:
+        for chunk in chunks:
+            assert loc.apply(chunk) == rep.apply(chunk)
+        assert rep.labels() == loc.labels()
+        # check_invariants on a replicated lane also byte-compares every
+        # replica's snapshot against its primary's
+        rep.check_invariants()
+    finally:
+        loc.close()
+        rep.close()
+
+
+def test_primary_kill_fails_over_with_oracle_identical_labels():
+    chunks, _ = interleaved_chunks(n=160, d=4, seed=4)
+    half = len(chunks) // 2
+    loc = build_index(cfg_for(2, "local", seed=4))
+    rep = build_index(cfg_for(2, "tcp", seed=4, replicas=1, obs=True))
+    try:
+        for chunk in chunks[:half]:
+            assert loc.apply(chunk) == rep.apply(chunk)
+        # SIGKILL shard 0's primary mid-stream: the lane must promote the
+        # replica and keep answering, invisibly to the caller
+        lane = rep.clients[0]
+        lane._members[0].client._proc.kill()
+        for chunk in chunks[half:]:
+            assert loc.apply(chunk) == rep.apply(chunk)
+        assert rep.labels() == loc.labels()
+        rep.check_invariants()
+        metrics = rep.obs.snapshot()["metrics"]
+        assert metrics["failover.promotions"]["value"] >= 1
+        # fleet counters exist in every instrumented snapshot, fired or not
+        assert "rpc.retries" in metrics
+        assert "failover.resyncs" in metrics
+    finally:
+        loc.close()
+        rep.close()
+
+
+def test_replicas_zero_kill_raises_fast_and_rolls_back():
+    X, _ = blobs(n=120, d=4, n_clusters=2, cluster_std=0.2, seed=5)
+    idx = build_index(cfg_for(2, "tcp", seed=5))
+    try:
+        idx.insert_batch(X[:80])
+        idx.clients[0]._proc.kill()
+        idx.clients[0]._proc.wait()
+        before_next = idx._next_idx
+        before_home = dict(idx._home)
+        survivor_ids = sorted(idx.clients[1].ids())
+        t0 = time.perf_counter()
+        with pytest.raises(ShardUnavailableError, match="shard 0"):
+            idx.insert_batch(X[80:])
+        # fail fast (worker is a known corpse), never a hang
+        assert time.perf_counter() - t0 < 10.0
+        # the failed fan-out was rolled back: no half-applied batch
+        assert idx._next_idx == before_next
+        assert dict(idx._home) == before_home
+        assert sorted(idx.clients[1].ids()) == survivor_ids
+    finally:
+        idx.close()  # idempotent, including the dead shard
+
+
+# ---------------------------------------------------------------------- #
+# chaos harness
+# ---------------------------------------------------------------------- #
+def test_partial_fanout_drop_rolls_back_then_recovers():
+    """A transient one-shot failure on one shard mid-insert_batch leaves
+    the coordinator's bridge/router state untouched; retrying the same
+    batch then lands, and the end state matches the fault-free oracle."""
+    X, _ = blobs(n=120, d=4, n_clusters=2, cluster_std=0.2, seed=7)
+    oracle = build_index(cfg_for(2, "local", seed=7))
+    idx = build_index(cfg_for(2, "local", seed=7))
+    try:
+        idx.insert_batch(X[:60])
+        oracle.insert_batch(X[:60])
+        n_before = len(idx)
+        idx.clients[1] = ChaosClient(idx.clients[1], "drop",
+                                     kinds=frozenset({"insert_batch"}))
+        with pytest.raises(ShardUnavailableError, match="shard 1"):
+            idx.insert_batch(X[60:])
+        assert len(idx) == n_before
+        idx.check_invariants()
+        assert idx.labels() == oracle.labels()
+        # the drop fired once (every=0): the retry goes through, and the
+        # compensating rollback didn't poison the id space
+        assert idx.insert_batch(X[60:]) == oracle.insert_batch(X[60:])
+        assert idx.labels() == oracle.labels()
+        assert idx.clients[1].injected == 1
+    finally:
+        idx.close()
+        oracle.close()
+
+
+def test_chaos_close_is_transparent_over_tcp():
+    """Socket kills at the Nth request and every 2nd after: the TCP
+    retry + dedup machinery must absorb all of them — same labels as the
+    in-process engine, no double-applied mutations."""
+    X, _ = blobs(n=60, d=4, n_clusters=2, cluster_std=0.2, seed=8)
+    loc = build_index(inner_cfg())
+    t = TcpTransport(inner_cfg(), shard_id=0)
+    c = ChaosClient(t, "close", at=2, every=2)
+    try:
+        for i in range(0, 60, 10):
+            ids = list(range(i, i + 10))
+            c.insert_batch(X[i:i + 10], ids=ids)
+            loc.insert_batch(X[i:i + 10], ids=ids)
+        c.delete_batch(list(range(0, 20)))
+        loc.delete_batch(list(range(0, 20)))
+        assert c.labels() == loc.labels()
+        assert sorted(c.ids()) == sorted(loc.ids())
+        assert c.injected >= 2
+    finally:
+        c.close()
+        loc.close()
+
+
+def test_chaos_validates_its_knobs():
+    local = LocalTransport(inner_cfg())
+    try:
+        with pytest.raises(ValueError, match="unknown chaos mode"):
+            ChaosClient(local, "explode")
+        with pytest.raises(ValueError, match="at must be"):
+            ChaosClient(local, "drop", at=0)
+        # close/corrupt operate on the socket; a socketless client can't
+        with pytest.raises(ValueError, match="socket-backed"):
+            ChaosClient(local, "close")
+    finally:
+        local.close()
+
+
+# ---------------------------------------------------------------------- #
+# config surface
+# ---------------------------------------------------------------------- #
+def test_config_validates_replicas_and_timeout_by_name():
+    with pytest.raises(ValueError, match="replicas"):
+        cfg_for(2, "tcp", replicas=-1)
+    with pytest.raises(ValueError, match="rpc_timeout_s"):
+        cfg_for(2, "tcp", rpc_timeout_s=0.0)
+    cfg = cfg_for(2, "tcp", replicas=2, rpc_timeout_s=1.5)
+    assert cfg.replicas == 2 and cfg.rpc_timeout_s == 1.5
