@@ -1,7 +1,7 @@
-"""Kernel micro-benchmarks: lsh_hash / pairwise / flash-attention wall time
-(jnp ref path on CPU; the Pallas kernels target TPU and are validated in
-interpret mode) + device-hash batched-update throughput vs the sequential
-host path (the beyond-paper batch optimisation)."""
+"""Kernel micro-benchmarks: lsh_hash / bucket-core / pairwise / attention
+wall time (jnp ref path on CPU; the Pallas kernels target TPU and are
+validated in interpret mode) + dynamic-update throughput across the three
+inner engines (sequential dict, batched dict, SoA vectorised)."""
 
 from __future__ import annotations
 
@@ -29,12 +29,22 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run():
+def _insert_throughput(cfg, X, backend, batch):
+    t0 = time.perf_counter()
+    ix = build_index(cfg.replace(backend=backend))
+    for s in range(0, len(X), batch):
+        ix.insert_batch(X[s:s + batch])
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
 
     # hashing: (n, d) -> (n, t, 2)
-    for n, d, t in [(100_000, 20, 10), (500_000, 20, 10)]:
+    hash_shapes = ([(20_000, 20, 10)] if smoke
+                   else [(100_000, 20, 10), (500_000, 20, 10)])
+    for n, d, t in hash_shapes:
         x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
         eta = jnp.asarray(rng.uniform(0, 1.5, t), jnp.float32)
         mix = jnp.asarray(rng.integers(1, 2**31 - 1, (2, t, d)), jnp.int32)
@@ -43,8 +53,29 @@ def run():
         rows.append({"bench": f"lsh_hash n={n}", "us_per_call": dt * 1e6,
                      "derived": f"{n / dt / 1e6:.1f} Mpoints/s"})
 
+    # bucket occupancy / support-count kernels (the SoA engine's inner pass)
+    n, t, nb = (4_000, 8, 512) if smoke else (65_536, 8, 4_096)
+    slots = jnp.asarray(rng.integers(0, nb, (n, t)), jnp.int32)
+    sizes = jnp.asarray(rng.integers(0, 20, nb), jnp.int32)
+    impls = [("ref", slots, sizes)]
+    if not smoke:
+        # interpret mode is slow; bench it on a smaller tile
+        si = jnp.asarray(rng.integers(0, nb, (4_096, t)), jnp.int32)
+        impls.append(("pallas_interpret", si, sizes))
+    for impl, sl, sz in impls:
+        ni = int(sl.shape[0])
+        dt = _time(lambda a, b: ops.bucket_core_stats(a, b, k=10, impl=impl),
+                   sl, sz)
+        rows.append({"bench": f"bucket_core_stats[{impl}] n={ni}",
+                     "us_per_call": dt * 1e6,
+                     "derived": f"{ni / dt / 1e6:.1f} Mpoints/s"})
+        dt = _time(lambda a: ops.slot_counts(a, n_slots=nb, impl=impl), sl)
+        rows.append({"bench": f"slot_counts[{impl}] n={ni}",
+                     "us_per_call": dt * 1e6,
+                     "derived": f"{ni * t / dt / 1e6:.1f} Mupdates/s"})
+
     # pairwise counts
-    for n, d in [(4000, 20)]:
+    for n, d in [(1_000 if smoke else 4_000, 20)]:
         x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
         dt = _time(lambda a: ops.eps_neighbor_counts(a, eps=0.75, impl="ref"), x)
         rows.append({"bench": f"pairwise n={n}", "us_per_call": dt * 1e6,
@@ -52,36 +83,43 @@ def run():
 
     # attention (jnp chunked fallback used by models)
     from repro.models.attention import chunked_attention
-    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
-    kv = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)), jnp.bfloat16)
+    s_att = 256 if smoke else 1024
+    q = jnp.asarray(rng.normal(size=(1, 8, s_att, 64)), jnp.bfloat16)
+    kv = jnp.asarray(rng.normal(size=(1, 2, s_att, 64)), jnp.bfloat16)
     dt = _time(lambda a, b: chunked_attention(a, b, b, chunk=256), q, kv)
-    flops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2  # causal half
-    rows.append({"bench": "attention b1 h8 s1024", "us_per_call": dt * 1e6,
+    flops = 4 * 1 * 8 * s_att * s_att * 64 / 2  # causal half
+    rows.append({"bench": f"attention b1 h8 s{s_att}", "us_per_call": dt * 1e6,
                  "derived": f"{flops / dt / 1e9:.1f} GFLOP/s"})
 
-    # batched vs sequential dynamic updates (paper technique throughput)
-    X, _ = blobs(n=20000, d=20, n_clusters=10, seed=1)
+    # dynamic-update throughput: sequential dict vs batched dict vs SoA
+    n_dyn = 2_000 if smoke else 16_000
+    batch = 250 if smoke else 1_000
+    X, _ = blobs(n=n_dyn, d=20, n_clusters=10, seed=1)
     cfg = ClusterConfig(d=20, k=10, t=10, eps=0.75, seed=0)
     t0 = time.perf_counter()
     seq = build_index(cfg.replace(backend="dynamic"))
     for p in X:
         seq.insert(p)
     dt_seq = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    bat = build_index(cfg.replace(backend="batched"))
-    for s in range(0, len(X), 1000):
-        bat.insert_batch(X[s : s + 1000])
-    dt_bat = time.perf_counter() - t0
-    rows.append({"bench": "dyn insert 20k seq", "us_per_call": dt_seq / len(X) * 1e6,
-                 "derived": f"{len(X)/dt_seq:.0f} pts/s"})
-    rows.append({"bench": "dyn insert 20k batched", "us_per_call": dt_bat / len(X) * 1e6,
-                 "derived": f"{len(X)/dt_bat:.0f} pts/s ({dt_seq/dt_bat:.2f}x)"})
+    dt_bat = _insert_throughput(cfg, X, "batched", batch)
+    dt_soa = _insert_throughput(cfg, X, "soa", batch)
+    rows.append({"bench": f"dyn insert {n_dyn} seq",
+                 "us_per_call": dt_seq / n_dyn * 1e6,
+                 "derived": f"{n_dyn / dt_seq:.0f} pts/s"})
+    rows.append({"bench": f"dyn insert {n_dyn} batched",
+                 "us_per_call": dt_bat / n_dyn * 1e6,
+                 "derived": f"{n_dyn / dt_bat:.0f} pts/s ({dt_seq / dt_bat:.2f}x seq)"})
+    rows.append({"bench": f"dyn insert {n_dyn} soa",
+                 "us_per_call": dt_soa / n_dyn * 1e6,
+                 "derived": f"{n_dyn / dt_soa:.0f} pts/s ({dt_bat / dt_soa:.2f}x batched)"})
+
     for r in rows:
-        print(f"{r['bench']:28} {r['us_per_call']:12.1f} us  {r['derived']}")
+        print(f"{r['bench']:36} {r['us_per_call']:12.1f} us  {r['derived']}")
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "kernels.json").write_text(json.dumps(rows, indent=1))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(smoke="--smoke" in sys.argv)

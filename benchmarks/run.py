@@ -111,7 +111,7 @@ def main(argv=None) -> None:
     if args.only in (None, "kernels"):
         print("\n===== Kernel / batched-update benches =====")
         from .kernels import run as kr
-        for r in kr():
+        for r in kr(smoke=args.smoke):
             emit(r["bench"].replace(" ", "_"), r["us_per_call"], r["derived"])
 
     if args.only in (None, "ablations"):

@@ -6,6 +6,8 @@ key                engine
 ``dynamic``        DynamicDBSCAN — the paper's Alg. 2 (exact host keys)
 ``batched``        BatchedDynamicDBSCAN — batch hashing on host (mixed keys)
 ``batched-device`` BatchedDynamicDBSCAN(use_device=True) — Pallas/ref kernel
+``soa``            SoADynamicDBSCAN — vectorised structure-of-arrays core
+``soa-device``     SoADynamicDBSCAN(use_device=True) — bucket_ops kernels
 ``emz-static``     EMZ recompute-per-query baseline (Esfandiari et al.)
 ``naive``          exact Algorithm-1 DBSCAN recompute-per-query baseline
 ``emz-fixed``      EMZFixedCore §5 ablation (insert-only)
@@ -27,6 +29,7 @@ from ..core.batched import BatchedDynamicDBSCAN
 from ..core.dynamic_dbscan import DynamicDBSCAN, claim_index
 from ..core.fixed_core import EMZFixedCore
 from ..core.hashing import GridLSH
+from ..core.soa import SoADynamicDBSCAN
 from ..core.static_emz import emz_cluster
 from .config import ClusterConfig
 from .index import ClusterIndex
@@ -35,7 +38,7 @@ from .registry import register_backend
 #: backends keyed by the float32 device-hash mixed keys rather than exact
 #: int64 grid codes — consumers that must mirror an engine's bucket-key
 #: space (shard router, bridge directory, service digests) branch on this
-MIXED_KEY_BACKENDS = ("batched", "batched-device")
+MIXED_KEY_BACKENDS = ("batched", "batched-device", "soa", "soa-device")
 
 
 class EulerTourIndex(ClusterIndex):
@@ -104,6 +107,77 @@ class EulerTourIndex(ClusterIndex):
             "n_repair_links": self.engine.n_repair_links,
             "n_links": self.engine.forest.n_links,
             "n_cuts": self.engine.forest.n_cuts,
+        }
+
+
+class SoAIndex(ClusterIndex):
+    """Adapter over :class:`~repro.core.soa.SoADynamicDBSCAN` — the
+    vectorised structure-of-arrays engine.  Same protocol surface as
+    :class:`EulerTourIndex` (native point queries, O(1) core anchors,
+    drain_deltas change feed) with batch mutations as single array
+    passes instead of per-point forest updates."""
+
+    native_component_queries = True
+
+    def __init__(self, cfg: ClusterConfig, engine: SoADynamicDBSCAN):
+        super().__init__(cfg)
+        self.engine = engine
+        engine.obs = self.obs
+        self.component_of = engine.get_cluster  # bind the native query
+
+    def insert(self, x: np.ndarray, idx: Optional[int] = None) -> int:
+        return self.engine.add_point(x, idx=idx)
+
+    def delete(self, idx: int) -> None:
+        self.engine.delete_point(idx)
+
+    def insert_batch(self, X, ids=None) -> List[int]:
+        return self.engine.add_batch(np.asarray(X, dtype=np.float64),
+                                     ids=ids)
+
+    def delete_batch(self, ids) -> None:
+        self.engine.delete_batch([int(i) for i in ids])
+
+    def label(self, idx: int) -> int:  # hot-path
+        return self.engine.get_cluster(idx)
+
+    def labels(self, ids=None) -> Dict[int, int]:
+        return self.engine.labels(ids)
+
+    def core_anchor_of(self, idx):
+        return self.engine.core_anchor(idx)
+
+    def drain_deltas(self):
+        return self.engine.drain_deltas()
+
+    def is_core(self, idx: int) -> bool:
+        return self.engine.is_core(idx)
+
+    def ids(self):
+        return sorted(self.engine._row)
+
+    def __contains__(self, idx):
+        return idx in self.engine
+
+    def __len__(self):
+        return len(self.engine)
+
+    def _state(self):
+        return self.engine.state_dict()
+
+    def _load_state(self, state):
+        self.engine.load_state_dict(state)
+
+    def check_invariants(self):
+        self.engine.check_invariants()
+
+    def stats(self):
+        return {
+            "n_epoch_rebuilds": self.engine.n_epoch_rebuilds,
+            "n_promotions": self.engine.n_promotions,
+            "n_demotions": self.engine.n_demotions,
+            "n_grab_events": self.engine.n_grab_events,
+            "n_scan_events": self.engine.n_scan_events,
         }
 
 
@@ -297,6 +371,24 @@ def _build_batched_device(cfg: ClusterConfig) -> ClusterIndex:
     # device hashing through repro.kernels.ops (Pallas on TPU, jnp ref on
     # CPU — selected by REPRO_KERNELS, see kernels/ops.py)
     return _dynamic_engine(cfg, BatchedDynamicDBSCAN, use_device=True)
+
+
+@register_backend("soa")
+def _build_soa(cfg: ClusterConfig) -> ClusterIndex:
+    return SoAIndex(cfg, SoADynamicDBSCAN(
+        cfg.d, cfg.k, cfg.t, cfg.eps, seed=cfg.seed,
+        attach_orphans=cfg.attach_orphans, repair=cfg.repair,
+        use_device=False))
+
+
+@register_backend("soa-device")
+def _build_soa_device(cfg: ClusterConfig) -> ClusterIndex:
+    # bucket/support/core passes through repro.kernels.ops (Pallas on
+    # TPU, jnp ref on CPU — selected by REPRO_KERNELS, see kernels/ops.py)
+    return SoAIndex(cfg, SoADynamicDBSCAN(
+        cfg.d, cfg.k, cfg.t, cfg.eps, seed=cfg.seed,
+        attach_orphans=cfg.attach_orphans, repair=cfg.repair,
+        use_device=True))
 
 
 @register_backend("emz-static")

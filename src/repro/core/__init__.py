@@ -9,3 +9,4 @@ from .naive_dbscan import SklearnStyleDBSCAN, dbscan  # noqa: F401
 from .skiplist import SkipListSeq  # noqa: F401
 from .static_emz import EMZRecompute, emz_cluster  # noqa: F401
 from .batched import BatchedDynamicDBSCAN  # noqa: F401
+from .soa import SoADynamicDBSCAN  # noqa: F401

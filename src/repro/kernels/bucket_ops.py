@@ -1,0 +1,125 @@
+"""Pallas TPU kernels: bucket occupancy / support / core detection.
+
+The SoA engine (``repro.core.soa``) keys every point to ``t`` bucket
+*slots* (dense int32 ids resolved on the host against the bucket
+directory).  Given those slots, the per-batch inner loops of Definition 4
+are pure array passes:
+
+  * ``slot_counts``     — histogram a batch's (n, t) slot matrix into
+                          per-slot occupancy deltas (one scatter-add);
+  * ``bucket_core_stats`` — gather each point's t bucket sizes and reduce
+                          them to ``support = #{i : |bucket_i| >= k}`` and
+                          the core flag ``support > 0`` (Definition 4).
+
+Both are bandwidth-bound integer passes like ``lsh_hash``: one VMEM tile
+of slots per grid step, with the (padded) size/count vector replicated to
+every step.  ``slot_counts`` accumulates across grid steps into a single
+output block — TPU grids are sequential, so the += pattern is the
+documented reduction idiom.  ``interpret=True`` runs the same kernels on
+CPU; the jnp oracles live in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(slots_ref, sizes_ref, supp_ref, core_ref, *, k: int):
+    slots = slots_ref[...]          # (bn, t) i32 slot ids
+    sizes = sizes_ref[...]          # (nb,) i32 bucket occupancies
+    occ = jnp.take(sizes, slots, axis=0)          # (bn, t) gather
+    supp = jnp.sum((occ >= k).astype(jnp.int32), axis=-1)
+    supp_ref[...] = supp
+    core_ref[...] = (supp > 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def bucket_core_stats(
+    slots: jnp.ndarray,
+    sizes: jnp.ndarray,
+    *,
+    k: int,
+    block_n: int = 256,
+    interpret: bool = True,
+):
+    """(n, t) i32 slots + (nb,) i32 sizes -> ((n,), (n,)) i32 support/core.
+
+    ``support[p] = #{i : sizes[slots[p, i]] >= k}``; ``core = support > 0``.
+    See ref.bucket_core_stats.
+    """
+    n, t = slots.shape
+    n_pad = -n % block_n
+    if n_pad:
+        slots = jnp.pad(slots, ((0, n_pad), (0, 0)))  # pad rows gather slot 0
+    nb = sizes.shape[0]
+    nb_pad = -nb % 128
+    if nb_pad:
+        sizes = jnp.pad(sizes, (0, nb_pad))
+    grid = ((n + n_pad) // block_n,)
+    supp, core = pl.pallas_call(
+        functools.partial(_stats_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, t), lambda i: (i, 0)),
+            pl.BlockSpec((nb + nb_pad,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(slots.astype(jnp.int32), sizes.astype(jnp.int32))
+    return supp[:n], core[:n]
+
+
+def _counts_kernel(slots_ref, out_ref, *, n_slots: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    flat = slots_ref[...].reshape(-1)
+    # padded rows carry slot id n_slots (out of bounds) and are dropped
+    out_ref[...] += jnp.zeros((n_slots,), jnp.int32).at[flat].add(
+        1, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "block_n", "interpret"))
+def slot_counts(
+    slots: jnp.ndarray,
+    *,
+    n_slots: int,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n, t) i32 slots -> (n_slots,) i32 occupancy histogram.
+
+    ``out[s] = #{(p, i) : slots[p, i] == s}`` — the per-batch bucket-size
+    delta.  See ref.slot_counts.
+    """
+    n, t = slots.shape
+    n_pad = -n % block_n
+    nb_pad = -n_slots % 128
+    if n_pad:
+        # pad with an out-of-range slot so the scatter drops those rows
+        slots = jnp.pad(slots, ((0, n_pad), (0, 0)),
+                        constant_values=n_slots + nb_pad)
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_counts_kernel, n_slots=n_slots + nb_pad),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n_slots + nb_pad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_slots + nb_pad,), jnp.int32),
+        interpret=interpret,
+    )(slots.astype(jnp.int32))
+    return out[:n_slots]

@@ -11,6 +11,7 @@ from __future__ import annotations
 import os
 
 
+from . import bucket_ops as _bo
 from . import flash_attention as _fa
 from . import lsh_hash as _lh
 from . import pairwise_dist as _pd
@@ -31,6 +32,24 @@ def lsh_hash(x, eta, mixers, *, inv_cell: float, impl: str | None = None):
         return _ref.lsh_hash(x, eta, mixers, inv_cell)
     return _lh.lsh_hash(
         x, eta, mixers, inv_cell=inv_cell, interpret=impl == "pallas_interpret"
+    )
+
+
+def bucket_core_stats(slots, sizes, *, k: int, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "ref":
+        return _ref.bucket_core_stats(slots, sizes, k)
+    return _bo.bucket_core_stats(
+        slots, sizes, k=k, interpret=impl == "pallas_interpret"
+    )
+
+
+def slot_counts(slots, *, n_slots: int, impl: str | None = None):
+    impl = _impl(impl)
+    if impl == "ref":
+        return _ref.slot_counts(slots, n_slots)
+    return _bo.slot_counts(
+        slots, n_slots=n_slots, interpret=impl == "pallas_interpret"
     )
 
 

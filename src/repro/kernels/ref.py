@@ -46,6 +46,27 @@ def lsh_hash(x: jnp.ndarray, eta: jnp.ndarray, mixers: jnp.ndarray,
     return jnp.stack([_avalanche(acc_a), _avalanche(acc_b)], axis=-1)
 
 
+def bucket_core_stats(slots: jnp.ndarray, sizes: jnp.ndarray, k: int):
+    """Definition-4 support counts from bucket occupancies.
+
+    slots: (n, t) int32 bucket-slot ids (host-resolved directory entries)
+    sizes: (nb,) int32 current occupancy per slot
+    returns (support, core): (n,) int32 ``#{i : sizes[slots[p,i]] >= k}``
+    and the core indicator ``support > 0``.
+    """
+    occ = jnp.take(sizes, slots, axis=0)
+    supp = jnp.sum((occ >= k).astype(jnp.int32), axis=-1)
+    return supp, (supp > 0).astype(jnp.int32)
+
+
+def slot_counts(slots: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    """Occupancy histogram of a batch's (n, t) slot matrix:
+    ``out[s] = #{(p, i) : slots[p, i] == s}`` — the bucket-size delta one
+    insert batch contributes."""
+    flat = slots.reshape(-1)
+    return jnp.zeros((n_slots,), jnp.int32).at[flat].add(1, mode="drop")
+
+
 def eps_neighbor_counts(x: jnp.ndarray, eps: float) -> jnp.ndarray:
     """|B(x_i, eps)| per point (self included), O(n^2 d)."""
     sq = jnp.sum(x * x, axis=-1)

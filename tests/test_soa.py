@@ -1,0 +1,181 @@
+"""Tests for the vectorised structure-of-arrays engine (backend="soa"):
+kernel bit-exactness for the bucket/core ops, seeded oracle equivalence
+against the sequential dict engines on mixed insert/delete/label streams
+(including snapshot/restore round-trips), and inner_backend="soa" under
+ShardedIndex at S in {1, 2, 4}."""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ClusterConfig,
+    build_index,
+    restore_index,
+)
+from repro.data import blobs
+
+from test_api import assert_same_partition, mixed_stream
+
+
+def cfg4(**kw):
+    base = dict(d=4, k=8, t=8, eps=0.45, seed=0)
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+# ---------------------------------------------------------------------- #
+# kernel bit-exactness: Pallas interpret vs jnp ref vs numpy
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,t,nb", [(1, 1, 1), (7, 3, 5), (203, 7, 37),
+                                    (256, 8, 128), (301, 10, 513)])
+def test_bucket_core_stats_matches_ref(n, t, nb):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(n * 31 + t)
+    slots = jnp.asarray(rng.integers(0, nb, (n, t)), jnp.int32)
+    sizes = jnp.asarray(rng.integers(0, 12, nb), jnp.int32)
+    for k in (1, 3, 9):
+        sr, cr = ops.bucket_core_stats(slots, sizes, k=k, impl="ref")
+        sp, cp = ops.bucket_core_stats(slots, sizes, k=k,
+                                       impl="pallas_interpret")
+        occ = np.asarray(sizes)[np.asarray(slots)]
+        want = (occ >= k).sum(axis=1).astype(np.int32)
+        assert np.array_equal(np.asarray(sr), want)
+        assert np.array_equal(np.asarray(sp), want)
+        assert np.array_equal(np.asarray(cr), (want > 0).astype(np.int32))
+        assert np.array_equal(np.asarray(cp), (want > 0).astype(np.int32))
+
+
+@pytest.mark.parametrize("n,t,nb", [(1, 1, 1), (7, 3, 5), (203, 7, 37),
+                                    (256, 8, 128), (301, 10, 513)])
+def test_slot_counts_matches_bincount(n, t, nb):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(n * 17 + nb)
+    slots = jnp.asarray(rng.integers(0, nb, (n, t)), jnp.int32)
+    want = np.bincount(np.asarray(slots).ravel(), minlength=nb)
+    for impl in ("ref", "pallas_interpret"):
+        got = np.asarray(ops.slot_counts(slots, n_slots=nb, impl=impl))
+        assert np.array_equal(got, want.astype(np.int32))
+
+
+# ---------------------------------------------------------------------- #
+# oracle equivalence: soa vs the sequential dict engines
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["soa", "soa-device"])
+def test_soa_registered_and_event_stream_matches_dynamic(backend):
+    cfg = cfg4()
+    ref = build_index(cfg.replace(backend="dynamic"))
+    soa = build_index(cfg.replace(backend=backend))
+    for ev in mixed_stream(n=250, seed=3):
+        assert ref.apply([ev]) == soa.apply([ev])
+    assert ref.labels() == soa.labels()
+    assert sorted(ref.ids()) == sorted(soa.ids())
+    soa.check_invariants()
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("orphans", [True, False])
+def test_soa_batches_match_batched_labels_exactly(seed, orphans):
+    """Batch-grained mixed stream with pinned out-of-order ids: identical
+    label dicts (not just same partition) and identical compacted journal
+    deltas at every step."""
+    rng = np.random.default_rng(seed + 50)
+    X, _ = blobs(n=400, d=4, n_clusters=4, cluster_std=0.3, seed=seed)
+    cfg = cfg4(seed=seed, attach_orphans=orphans)
+    A = build_index(cfg.replace(backend="batched"))
+    B = build_index(cfg.replace(backend="soa"))
+    pos, alive = 0, []
+    while pos < len(X):
+        b = int(rng.integers(1, 50))
+        chunk = X[pos:pos + b]
+        pos += b
+        ids = None
+        if rng.random() < 0.3:
+            base = 10_000 + pos * 10
+            ids = [None if rng.random() < 0.5 else base + j
+                   for j in range(len(chunk))]
+        assert A.insert_batch(chunk, ids=ids) == \
+            (got := B.insert_batch(chunk, ids=ids))
+        alive.extend(got)
+        assert sorted(A.drain_deltas()) == sorted(B.drain_deltas())
+        if rng.random() < 0.5 and len(alive) > 30:
+            nd = int(rng.integers(1, min(20, len(alive) - 10)))
+            dels = [alive.pop(int(rng.integers(len(alive))))
+                    for _ in range(nd)]
+            A.delete_batch(dels)
+            B.delete_batch(dels)
+            assert sorted(A.drain_deltas()) == sorted(B.drain_deltas())
+        assert A.labels() == B.labels()
+    A.check_invariants()
+    B.check_invariants()
+
+
+def test_soa_point_queries_agree_with_bulk_labels():
+    cfg = cfg4(seed=1)
+    ix = build_index(cfg.replace(backend="soa"))
+    X, _ = blobs(n=300, d=4, n_clusters=3, cluster_std=0.3, seed=1)
+    ids = ix.insert_batch(X)
+    labs = ix.labels()
+    for i in ids[::7]:
+        assert ix.label(i) == ix.component_of(i) == labs[i]
+        if ix.is_core(i):
+            assert ix.core_anchor_of(i) == i
+
+
+def test_soa_snapshot_restore_roundtrip_mid_stream():
+    cfg = cfg4(seed=2)
+    ix = build_index(cfg.replace(backend="soa"))
+    X, _ = blobs(n=350, d=4, n_clusters=4, cluster_std=0.3, seed=2)
+    ix.insert_batch(X[:200])
+    ix.delete_batch(list(ix.ids())[::5])
+    rest = restore_index(ix.snapshot())
+    assert rest.labels() == ix.labels()
+    assert rest.ids() == ix.ids()
+    rest.check_invariants()
+    # the restored index keeps tracking the original under further updates
+    a = ix.insert_batch(X[200:])
+    b = rest.insert_batch(X[200:])
+    assert a == b
+    assert rest.labels() == ix.labels()
+
+
+def test_soa_rejects_duplicate_ids_atomically():
+    ix = build_index(cfg4().replace(backend="soa"))
+    X, _ = blobs(n=10, d=4, n_clusters=1, cluster_std=0.2, seed=0)
+    ix.insert_batch(X[:3], ids=[7, 8, 9])
+    with pytest.raises(KeyError):
+        ix.insert_batch(X[3:6], ids=[11, 8, 12])
+    # the failed batch must not have committed any of its rows
+    assert sorted(ix.ids()) == [7, 8, 9]
+
+
+# ---------------------------------------------------------------------- #
+# sharded composition: inner_backend="soa"
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_soa_matches_inner_dynamic(shards):
+    base = dict(d=4, k=8, t=8, eps=0.45, seed=0)
+    ref = build_index(ClusterConfig(backend="dynamic", **base))
+    sh = build_index(ClusterConfig(backend="sharded", shards=shards,
+                                   inner_backend="soa", **base))
+    for ev in mixed_stream(n=220, seed=5):
+        assert ref.apply([ev]) == sh.apply([ev])
+    assert_same_partition(ref.labels(), sh.labels())
+    sh.check_invariants()
+
+
+def test_sharded_soa_snapshot_roundtrip():
+    cfg = ClusterConfig(backend="sharded", shards=2, inner_backend="soa",
+                        d=4, k=8, t=8, eps=0.45, seed=0)
+    sh = build_index(cfg)
+    X, _ = blobs(n=240, d=4, n_clusters=3, cluster_std=0.3, seed=4)
+    sh.insert_batch(X)
+    sh.delete_batch(list(sh.ids())[::4])
+    rest = restore_index(sh.snapshot())
+    assert rest.labels() == sh.labels()
+    assert rest.ids() == sh.ids()
