@@ -22,7 +22,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     choices=["table2", "figure2", "scaling", "shards",
                              "serving", "kernels", "ablations",
-                             "paper_roofline", "roofline"])
+                             "paper_roofline", "roofline", "quality"])
     ap.add_argument("--workers", type=int, default=0,
                     help="thread-pool fan-out for the sharded backend")
     ap.add_argument("--transport", default="local",
@@ -136,6 +136,25 @@ def main(argv=None) -> None:
              f"{rows['ref_vs_floor']:.2f}x floor")
         emit("paper_roofline/pallas", rows["roofline_time_floor_us"],
              "1.00x floor (VMEM single pass)")
+
+    if args.only == "quality":
+        # explicit-only: the full sweep re-times every engine on the
+        # paper-scale stream, so it does not ride the default run
+        print("\n===== Quality/speed frontier (sampled-core tier) =====")
+        from .quality_speed import main as qs
+        out = qs(["--smoke"] if args.smoke else [])
+        for r in out["sweep"]:
+            rate = r["sample_rate"]
+            if r["backend"] == "approx":
+                emit(f"quality/approx_r{rate}",
+                     1e6 / r["insert_per_s"],
+                     f"ARI={r['ari_vs_exact']:.4f};"
+                     f"speedup={r['insert_speedup_vs_soa']:.2f}x")
+            else:
+                emit(f"quality/tiered_r{rate}",
+                     1e6 / r["update_per_s"],
+                     f"div_ari={r['divergence_ari']:.4f};"
+                     f"label_per_s={r['label_per_s']:.0f}")
 
     if args.only in (None, "roofline"):
         print("\n===== Roofline table (from dry-run artifacts) =====")

@@ -26,12 +26,15 @@ ap.add_argument("--shards", type=int, default=0,
                 help="shard the engine under test across S LSH key ranges")
 ap.add_argument("--transport", default="local", choices=("local", "process"),
                 help="reach the shards in-process or as spawned servers")
+ap.add_argument("--sample-rate", type=float, default=0.2,
+                help="sampled-core fraction for --backend approx/tiered "
+                     "(ignored by the exact engines)")
 args = ap.parse_args()
 
 n, d, batch = 12000, 8, 1000
 X, y = blobs(n=n, d=d, n_clusters=8, cluster_std=0.2, seed=3)
 cfg = ClusterConfig(d=d, k=10, t=10, eps=0.5, seed=0,
-                    transport=args.transport)
+                    transport=args.transport, sample_rate=args.sample_rate)
 
 dyn = build_index(cfg.replace(backend=args.backend).with_shards(args.shards))
 emz = build_index(cfg.replace(backend=args.baseline))

@@ -88,6 +88,7 @@ class RegistryConformance(AnalysisPass):
         if base is None or classes is None:
             import repro.api  # noqa: F401 — registers the built-in backends
             import repro.shard  # noqa: F401 — registers "sharded"
+            import repro.tiered  # noqa: F401 — TieredIndex into the closure
             from ..api.index import ClusterIndex
 
             base = base or ClusterIndex

@@ -8,6 +8,7 @@ key                engine
 ``batched-device`` BatchedDynamicDBSCAN(use_device=True) — Pallas/ref kernel
 ``soa``            SoADynamicDBSCAN — vectorised structure-of-arrays core
 ``soa-device``     SoADynamicDBSCAN(use_device=True) — bucket_ops kernels
+``approx``         SampledCoreDBSCAN — DBSCAN++-style sampled cores
 ``emz-static``     EMZ recompute-per-query baseline (Esfandiari et al.)
 ``naive``          exact Algorithm-1 DBSCAN recompute-per-query baseline
 ``emz-fixed``      EMZFixedCore §5 ablation (insert-only)
@@ -25,6 +26,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..core.approx import SampledCoreDBSCAN
 from ..core.batched import BatchedDynamicDBSCAN
 from ..core.dynamic_dbscan import DynamicDBSCAN, claim_index
 from ..core.fixed_core import EMZFixedCore
@@ -38,7 +40,8 @@ from .registry import register_backend
 #: backends keyed by the float32 device-hash mixed keys rather than exact
 #: int64 grid codes — consumers that must mirror an engine's bucket-key
 #: space (shard router, bridge directory, service digests) branch on this
-MIXED_KEY_BACKENDS = ("batched", "batched-device", "soa", "soa-device")
+MIXED_KEY_BACKENDS = ("batched", "batched-device", "soa", "soa-device",
+                      "approx")
 
 
 class EulerTourIndex(ClusterIndex):
@@ -179,6 +182,21 @@ class SoAIndex(ClusterIndex):
             "n_grab_events": self.engine.n_grab_events,
             "n_scan_events": self.engine.n_scan_events,
         }
+
+
+class ApproxIndex(SoAIndex):
+    """Adapter over :class:`~repro.core.approx.SampledCoreDBSCAN` — same
+    protocol surface as :class:`SoAIndex` (it *is* the SoA engine with
+    the density test restricted to a deterministic id-hash sample), plus
+    sampling diagnostics in ``stats()``."""
+
+    native_component_queries = True
+
+    def stats(self):
+        s = super().stats()
+        s["sample_rate"] = self.engine.sample_rate
+        s["n_sampled"] = self.engine.n_sampled()
+        return s
 
 
 class RecomputeIndex(ClusterIndex):
@@ -389,6 +407,22 @@ def _build_soa_device(cfg: ClusterConfig) -> ClusterIndex:
         cfg.d, cfg.k, cfg.t, cfg.eps, seed=cfg.seed,
         attach_orphans=cfg.attach_orphans, repair=cfg.repair,
         use_device=True))
+
+
+@register_backend("approx")
+def _build_approx(cfg: ClusterConfig) -> ClusterIndex:
+    return ApproxIndex(cfg, SampledCoreDBSCAN(
+        cfg.d, cfg.k, cfg.t, cfg.eps, seed=cfg.seed,
+        attach_orphans=cfg.attach_orphans, repair=cfg.repair,
+        use_device=False, sample_rate=cfg.sample_rate,
+        approx_seed=cfg.approx_seed))
+
+
+@register_backend("tiered")
+def _build_tiered(cfg: ClusterConfig) -> ClusterIndex:
+    from ..tiered import TieredIndex  # lazy: repro.tiered imports repro.api
+
+    return TieredIndex(cfg)
 
 
 @register_backend("emz-static")

@@ -50,6 +50,11 @@ class ClusterConfig:
     #                              spans (repro.obs).  Off by default; the
     #                              null instruments keep un-instrumented
     #                              runs and wire bytes bit-identical.
+    sample_rate: float = 1.0     # backend="approx": fraction of points in
+    #                              the deterministic core sample (1.0 =
+    #                              exact; see repro.core.approx)
+    approx_seed: int = 0         # backend="approx": seed folded into the
+    #                              id-hash sampling predicate
 
     def __post_init__(self) -> None:
         # Validate at construction with named messages instead of failing
@@ -75,6 +80,9 @@ class ClusterConfig:
                 f"rpc_timeout_s must be > 0, got {self.rpc_timeout_s}")
         if self.inner_backend == "sharded":
             raise ValueError("inner_backend cannot itself be 'sharded'")
+        if not 0.0 < self.sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate must be in (0, 1], got {self.sample_rate}")
         if self.transport not in ("local", "process", "tcp"):
             raise ValueError(
                 f"unknown transport {self.transport!r} "

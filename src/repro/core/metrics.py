@@ -22,6 +22,17 @@ def _comb2(x):
 
 
 def adjusted_rand_index(labels_true, labels_pred) -> float:
+    labels_true = np.asarray(labels_true)
+    labels_pred = np.asarray(labels_pred)
+    if labels_true.shape != labels_pred.shape:
+        raise ValueError(
+            f"label shape mismatch: {labels_true.shape} vs "
+            f"{labels_pred.shape}")
+    # degenerate streams: no points, or a single point — the labellings
+    # carry no pair information, and identical-partition conventions
+    # (incl. two all-noise labellings) say perfect agreement
+    if labels_true.size <= 1:
+        return 1.0
     m = _contingency(labels_true, labels_pred)
     n = m.sum()
     sum_comb = _comb2(m).sum()
@@ -41,6 +52,14 @@ def _entropy(counts: np.ndarray) -> float:
 
 
 def normalized_mutual_info(labels_true, labels_pred, average: str = "arithmetic") -> float:
+    labels_true = np.asarray(labels_true)
+    labels_pred = np.asarray(labels_pred)
+    if labels_true.shape != labels_pred.shape:
+        raise ValueError(
+            f"label shape mismatch: {labels_true.shape} vs "
+            f"{labels_pred.shape}")
+    if labels_true.size == 0:
+        return 1.0
     m = _contingency(labels_true, labels_pred).astype(np.float64)
     n = m.sum()
     if n == 0:

@@ -54,6 +54,7 @@ from .dynamic_dbscan import NOISE, check_unique_ids, claim_index
 from .hashing import GridLSH
 
 _KEY_W = 8  # mixed keys: 2 int32 words per (point, table)
+_EMPTY_MEMBERS: frozenset = frozenset()  # read-only _core_members default
 
 
 class _LiveView:
@@ -103,6 +104,11 @@ class SoADynamicDBSCAN:
         if repair not in ("exact", "paper"):
             raise ValueError(repair)
         self.d, self.k, self.t, self.eps = d, int(k), int(t), float(eps)
+        # the support threshold applied to _core_sizes.  Equal to k here;
+        # the sampled-core subclass rescales it to the sampled analogue
+        # max(1, round(k * sample_rate)) so the density test stays an
+        # unbiased estimate of ">= k total neighbors".
+        self.core_k = self.k
         self.lsh = lsh if lsh is not None else GridLSH(d, eps, t, seed)
         if self.lsh.t != self.t or self.lsh.d != d:
             raise ValueError("lsh family incompatible with (d, t)")
@@ -256,7 +262,7 @@ class SoADynamicDBSCAN:
         B = X.shape[0]
         if B == 0:
             return []
-        k, t = self.k, self.t
+        k, t = self.core_k, self.t
 
         # -- claim handles (atomic: duplicates raise before any mutation)
         staged: Dict[int, int] = {}
@@ -268,29 +274,35 @@ class SoADynamicDBSCAN:
             staged[idx] = j
             out.append(idx)
 
-        # -- one device pass: hash -> slots -> occupancy deltas
+        # -- one device pass: hash -> slots -> occupancy deltas.  smask
+        #    marks the core-eligible batch points (None = all; the
+        #    sampled-core subclass narrows it), and the "core sizes" the
+        #    crossings run on are whatever _batch_stats says drives
+        #    support — bucket occupancy here, sampled occupancy there.
         keys32 = self._hash_batch(X)
         slots = self._resolve_slots(keys32)
         ns = self._n_slots
         flat = slots.ravel()
-        delta, occ_final, supp_batch = self._batch_stats(slots, flat, ns)
-        new_sizes = self._bsize[:ns]  # updated in place by _batch_stats
-        old_sizes = new_sizes - delta
+        smask = self._elig_mask(out)
+        core_old, core_new, occ_core, supp_batch = self._batch_stats(
+            slots, flat, ns, smask)
 
         # -- threshold crossings: which slots crossed k, and at which step
-        crossing = np.nonzero((old_sizes < k) & (new_sizes >= k))[0]
+        crossing = np.nonzero((core_old < k) & (core_new >= k))[0]
         cross_step = np.full(ns, B + 1, np.int64)      # B+1 = never crossed
-        cross_step[new_sizes >= k] = -1                # already >= k...
+        cross_step[core_new >= k] = -1                 # already >= k...
         if len(crossing):
             cross_step[crossing] = self._cross_steps(
-                crossing, old_sizes, flat)             # ...unless this batch
+                crossing, core_old, slots, smask)      # ...unless this batch
 
         # -- existing members of crossing buckets gain support (the
         #    sequential engine's "bucket crosses: every member gains")
         promoted_existing: Dict[int, int] = {}  # id -> core_time
         for s in crossing:
             step = int(cross_step[s])
-            for m in self._members.get(int(s), ()):
+            for m in self._core_members(int(s)):
+                if not self._core_candidate(m):
+                    continue
                 r = self._row[m]
                 self._support[r] += 1
                 if self._support[r] == 1:
@@ -323,19 +335,61 @@ class SoADynamicDBSCAN:
         # -- core_time per batch point: min over core buckets of
         #    max(insert step, bucket cross step); non-core = B+1
         steps = np.arange(B, dtype=np.int64)[:, None]
-        cand = np.where(occ_final >= k,
+        cand = np.where(occ_core >= k,
                         np.maximum(cross_step[slots], steps), B + 1)
+        if smask is not None:
+            cand = np.where(smask[:, None], cand, B + 1)
         core_time = cand.min(axis=1)
 
         self._apply_insert_events(out, rows, slots, step_of, core_time,
-                                  promoted_existing, occ_final)
+                                  promoted_existing, occ_core)
         self._comp = None
         self._compact_journal()
         return out
 
-    def _batch_stats(self, slots: np.ndarray, flat: np.ndarray, ns: int):
-        """Occupancy deltas + final per-point support for one batch —
-        the kernel pass (``use_device``) or its bit-exact numpy mirror."""
+    # ------------------------------------------------------------------ #
+    # sampling hooks — the exact engine treats every point as core-
+    # eligible; SampledCoreDBSCAN (core/approx.py) overrides these so
+    # support runs on the sampled occupancy while membership/attachment
+    # keep seeing every point.
+    # ------------------------------------------------------------------ #
+    def _elig_mask(self, ids: Sequence[int]) -> Optional[np.ndarray]:
+        """(B,) bool core-eligibility of the given ids; None = all."""
+        return None
+
+    def _core_candidate(self, m: int) -> bool:
+        """May ``m`` ever hold support (be a core point)?"""
+        return True
+
+    def _grab_skip(self, s: int) -> bool:
+        """True when bucket ``s`` can hold no grabbable orphan (every
+        member is a final core)."""
+        return self._bsize[s] >= self.core_k
+
+    def _core_sizes(self, ns: int) -> np.ndarray:
+        """The per-slot sizes support thresholds run on (view)."""
+        return self._bsize[:ns]
+
+    def _core_members(self, s: int) -> Set[int]:
+        """Members of slot ``s`` that may hold support or anchor a border
+        — the pool crossings, demotions, scans and re-links walk.  The
+        sampled-core subclass narrows it to the sampled members, which is
+        what keeps deletion repair O(cores) instead of O(bucket)."""
+        return self._members.get(s) or _EMPTY_MEMBERS
+
+    def _member_discard(self, s: int, idx: int) -> None:
+        """Remove ``idx`` from slot ``s``'s membership (single seam so
+        subclasses keep any parallel member structures in sync)."""
+        self._members[s].discard(idx)
+
+    def _batch_stats(self, slots: np.ndarray, flat: np.ndarray, ns: int,
+                     smask: Optional[np.ndarray]):
+        """One array pass per insert batch — occupancy deltas + final
+        per-point support, via the kernel pass (``use_device``) or its
+        bit-exact numpy mirror.  Returns ``(core_old, core_new,
+        occ_core, supp)``: the support-driving slot sizes before/after
+        the batch, their per-(point, table) gather, and each batch
+        point's final support."""
         if self.use_device:
             import jax.numpy as jnp
 
@@ -347,27 +401,36 @@ class SoADynamicDBSCAN:
             delta = np.asarray(ops.slot_counts(jslots, n_slots=ns, impl=impl))
             self._bsize[:ns] += delta
             supp, _core = ops.bucket_core_stats(
-                jslots, jnp.asarray(self._bsize[:ns]), k=self.k, impl=impl)
+                jslots, jnp.asarray(self._bsize[:ns]), k=self.core_k,
+                impl=impl)
             supp = np.asarray(supp)
         else:
             delta = np.bincount(flat, minlength=ns).astype(np.int32)
             self._bsize[:ns] += delta
             supp = np.add.reduce(
-                self._bsize[slots] >= self.k, axis=1, dtype=np.int32)
-        occ_final = self._bsize[slots]
-        return delta, occ_final, supp
+                self._bsize[slots] >= self.core_k, axis=1, dtype=np.int32)
+        new_sizes = self._bsize[:ns]
+        return new_sizes - delta, new_sizes, self._bsize[slots], supp
 
-    def _cross_steps(self, crossing: np.ndarray, old_sizes: np.ndarray,
-                     flat: np.ndarray) -> np.ndarray:
+    def _cross_steps(self, crossing: np.ndarray, core_old: np.ndarray,
+                     slots: np.ndarray,
+                     smask: Optional[np.ndarray]) -> np.ndarray:
         """Batch step at which each crossing slot reached size k: the
-        (k - old_size)-th arrival into the slot this batch.  One stable
-        argsort of the flat slot list; within a slot the order is by
-        flat position, i.e. by batch step."""
+        (k - old_size)-th core-eligible arrival into the slot this batch.
+        One stable argsort of the flat slot list; within a slot the order
+        is by flat position, i.e. by batch step."""
+        if smask is None:
+            flat = slots.ravel()
+            rows_map = None
+        else:
+            rows_map = np.nonzero(smask)[0]
+            flat = slots[rows_map].ravel()
         order = np.argsort(flat, kind="stable")
         sf = flat[order]
         starts = np.searchsorted(sf, crossing)
-        entry = starts + (self.k - old_sizes[crossing] - 1)
-        return order[entry] // self.t
+        entry = starts + (self.core_k - core_old[crossing] - 1)
+        steps = order[entry] // self.t
+        return steps if rows_map is None else rows_map[steps]
 
     def _add_members(self, slots: np.ndarray, out: List[int]) -> None:
         for i in range(self.t):
@@ -398,11 +461,11 @@ class SoADynamicDBSCAN:
         # existing, exactly the sequential engine's sorted(promoted) sets
         events: List[Tuple[int, int, np.ndarray]] = []
         ctime: Dict[int, int] = {}
-        for j in range(B):
+        core_js = np.nonzero(core_time <= B)[0]
+        for j in core_js:
             ct = int(core_time[j])
-            if ct <= B:
-                ctime[out[j]] = ct
-                events.append((ct, out[j], slots[j]))
+            ctime[out[j]] = ct
+            events.append((ct, out[j], slots[j]))
         for m, ct in promoted_existing.items():
             ctime[m] = ct
             r = self._row[m]
@@ -412,9 +475,8 @@ class SoADynamicDBSCAN:
                 self.anchored[old].discard(m)
                 self._attach[r] = -1
             events.append((ct, m, self._slots[r]))
-        for j in range(B):
-            if int(core_time[j]) <= B:
-                self._record(out[j], None, out[j])
+        for j in core_js:
+            self._record(out[j], None, out[j])
         self.n_promotions += len(events)
 
         # helper: is m core at time s (strictly before)?  -1 = pre-batch
@@ -427,42 +489,155 @@ class SoADynamicDBSCAN:
                 return ct < s
             return support[row[m]] > 0 and m not in step_of
 
-        # -- grab events: promoted core c, sub-threshold bucket, orphan y
+        # -- grab events: promoted core c, sub-threshold bucket, orphan y.
+        # Orphan status (final support 0, no pre-batch anchor) is constant
+        # through the replay — attachments only apply at the end — so the
+        # loop is inverted: one vectorised sweep finds every orphan row,
+        # and each orphan binary-searches its own slots' time-sorted event
+        # lists for the earliest grab after its insertion.  A slot's list
+        # is sorted by (time, id), so the first event with ct > step IS
+        # min(ct, c) over that slot's qualifying grabs.  No orphan can
+        # live in a slot the old per-slot walk skipped (all-core buckets
+        # give every member support > 0), so no skip test is needed.
         best: Dict[int, Tuple[int, int]] = {}
-        if self.attach_orphans:
+        cand = (np.nonzero((support == 0) & (self._attach < 0)
+                           & (self._ids != -1))[0]
+                if self.attach_orphans and events else ())
+        if len(cand):  # no orphans (dense exact case): skip event scatter
+            tmp: Dict[int, List[Tuple[int, int]]] = {}
             for ct, c, srow in events:
                 for s in srow:
-                    s = int(s)
-                    if self._bsize[s] >= k:
-                        continue  # all members are final cores
-                    for y in self._members[s]:
-                        if y == c:
-                            continue
-                        ry = row[y]
-                        if support[ry] != 0 or self._attach[ry] >= 0:
-                            continue
-                        if step_of.get(y, -1) >= ct:
-                            continue  # y not yet present at the grab
-                        ev = (ct, c)
-                        if y not in best or ev < best[y]:
-                            best[y] = ev
+                    tmp.setdefault(int(s), []).append((ct, c))
+            evs_ct: Dict[int, np.ndarray] = {}
+            evs_c: Dict[int, np.ndarray] = {}
+            for s, lst in tmp.items():
+                lst.sort()
+                evs_ct[s] = np.fromiter((t for t, _ in lst), np.int64,
+                                        len(lst))
+                evs_c[s] = np.fromiter((c for _, c in lst), np.int64,
+                                       len(lst))
+            # only orphans sharing a bucket with a promotion can be
+            # grabbed — with a stable core set (sampled tier) this drops
+            # the persistent-noise sweep to near nothing
+            ev_slots = np.fromiter(tmp, np.int64, len(tmp))
+            ev_slots.sort()
+            touch = np.isin(self._slots[cand], ev_slots).any(axis=1)
+            cand = cand[touch]
+        if len(cand):
+            n_orph = len(cand)
+            ids_c = self._ids[cand]
+            steps = np.fromiter(
+                (step_of.get(int(y), -1) for y in ids_c),
+                np.int64, n_orph)
+            S = self._slots[cand]                       # (n_orph, t)
+            INF2 = np.iinfo(np.int64).max
+            best_ct = np.full(n_orph, INF2, np.int64)
+            best_c = np.full(n_orph, INF2, np.int64)
+            # group (orphan, slot) pairs by slot: one bulk search per
+            # slot instead of one Python bisect per pair
+            flat = S.ravel()
+            oidx = np.repeat(np.arange(n_orph), S.shape[1])
+            order = np.argsort(flat, kind="stable")
+            fs, fo = flat[order], oidx[order]
+            cuts = np.nonzero(np.diff(fs))[0] + 1
+            starts = np.concatenate([[0], cuts])
+            ends = np.concatenate([cuts, [len(fs)]])
+            for a, b in zip(starts, ends):
+                s = int(fs[a])
+                ect = evs_ct.get(s)
+                if ect is None:
+                    continue
+                g = fo[a:b]
+                pos = np.searchsorted(ect, steps[g], side="right")
+                q = pos < len(ect)
+                if not q.any():
+                    continue
+                g2, p2 = g[q], pos[q]
+                ct2, c2 = ect[p2], evs_c[s][p2]
+                upd = (ct2 < best_ct[g2]) | ((ct2 == best_ct[g2])
+                                             & (c2 < best_c[g2]))
+                if upd.any():
+                    gi = g2[upd]
+                    best_ct[gi] = ct2[upd]
+                    best_c[gi] = c2[upd]
+            for i in np.nonzero(best_ct < INF2)[0]:
+                best[int(ids_c[i])] = (int(best_ct[i]),
+                                       int(best_c[i]))
 
-        # -- scan events: final-non-core batch points attach at insert
-        for j in range(B):
-            if int(core_time[j]) <= B:
-                continue
-            y = out[j]
-            target = None
-            for s in slots[j]:
-                cands = [m for m in self._members[int(s)]
-                         if m != y and step_of.get(m, -1) < j
-                         and _core_at(m, j)]
-                if cands:
-                    target = min(cands)
-                    break
-            self.n_scan_events += 1
-            if target is not None:
-                best[y] = (-1, target)  # the scan precedes any later grab
+        # -- scan events: final-non-core batch points attach at insert.
+        # A point m answers a scan at step j iff it is core strictly
+        # before j: core time max(core_time_m, insert_step_m), with -1
+        # for pre-batch cores.  Bulk form of "for each border, first
+        # table whose slot holds such an m": one vectorised candidate
+        # build over the final core set (restricted to the slots borders
+        # actually touch), lexsorted by (slot, time, id) so a per-slot
+        # slice is a time-sorted prefix-min table; then one grouped
+        # searchsorted per touched slot.  This is the hot path when most
+        # of a batch is non-core (approx tier); the exact engine's dense
+        # case has no scan events at all.
+        borders = np.nonzero(core_time > B)[0]
+        if len(borders):
+            nb, tw = len(borders), slots.shape[1]
+            INF3 = np.iinfo(np.int64).max
+            cand_id = np.full((nb, tw), INF3, np.int64)
+            have = np.zeros((nb, tw), bool)
+            flatb = slots[borders].ravel()
+            bidx = np.repeat(np.arange(nb), tw)
+            tpos = np.tile(np.arange(tw), nb)
+            # a slot with no core-candidate members can never answer a
+            # scan — drops most fringe buckets in the sampled subclass
+            csz = self._core_sizes(self._n_slots)
+            keep = csz[flatb] > 0
+            flatb, bidx, tpos = flatb[keep], bidx[keep], tpos[keep]
+        if len(borders) and len(flatb):
+            needed = np.unique(flatb)
+            # candidate pool: every final core (batch promotions carry
+            # their event time; pre-batch cores time -1).  Batch points
+            # with final support are always in ctime, so the override
+            # loop below touches promotion events only.
+            rowsE = np.nonzero((support > 0) & (self._ids != -1))[0]
+            timesE = np.full(len(rowsE), -1, np.int64)
+            for m, ct in ctime.items():
+                st = step_of.get(m, -1)
+                p = int(np.searchsorted(rowsE, row[m]))
+                timesE[p] = ct if ct > st else st
+            flatE = self._slots[rowsE].ravel()
+            idsR = np.repeat(self._ids[rowsE], tw)
+            timesR = np.repeat(timesE, tw)
+            inn = np.isin(flatE, needed)
+            flatE, idsR, timesR = flatE[inn], idsR[inn], timesR[inn]
+        if len(borders) and len(flatb) and len(flatE):
+            orderE = np.lexsort((idsR, timesR, flatE))
+            fsE, tsE, msE = flatE[orderE], timesR[orderE], idsR[orderE]
+            # per-slot running min of candidate id in time order, with no
+            # per-segment loop: stagger segments by a large DECREASING
+            # offset so a global min-accumulate can never carry a value
+            # across a segment boundary (earlier segments sit strictly
+            # above later ones), then subtract the offsets back out
+            seg = np.cumsum(np.concatenate([[0], np.diff(fsE) != 0]))
+            base = np.int64(msE.min())
+            big = np.int64(msE.max()) - base + 1
+            off = (np.int64(seg[-1]) - seg) * big
+            pmin = np.minimum.accumulate(msE - base + off) - off + base
+            # one composite-key search answers every (border, slot)
+            # query: entries < slot*C + (j+1) in the lexsorted pool are
+            # exactly this slot's candidates with time < j
+            C = np.int64(B + 2)
+            ckey = fsE.astype(np.int64) * C + (tsE + 1)
+            qstart = np.searchsorted(fsE, flatb, side="left")
+            pos = np.searchsorted(
+                ckey, flatb.astype(np.int64) * C + (borders[bidx] + 1),
+                side="left")
+            q = pos > qstart
+            bi, ti = bidx[q], tpos[q]
+            have[bi, ti] = True
+            cand_id[bi, ti] = pmin[pos[q] - 1]
+            hit = have.any(axis=1)
+            first = have.argmax(axis=1)  # first table in scan order
+            for i in np.nonzero(hit)[0]:
+                # the scan precedes any later grab
+                best[out[borders[i]]] = (-1, int(cand_id[i, first[i]]))
+        self.n_scan_events += len(borders)
 
         # -- apply attachments
         for y, (_, c) in best.items():
@@ -482,11 +657,138 @@ class SoADynamicDBSCAN:
         self._compact_journal()
 
     def delete_batch(self, ids: Sequence[int]) -> None:
+        """One array pass per batch: departure counts, threshold-crossing
+        steps, and the occupancy decrement are computed for the whole
+        batch up front (bincount + one stable argsort — the deletion
+        mirror of ``add_batch``'s insert pass); the per-point Python work
+        that remains is event-scale only (journal records, border
+        re-links, demotion cascades), replayed in deletion order so the
+        result is bit-identical to the sequential path."""
         check_unique_ids(ids)
-        for i in ids:
-            self._delete_one(i)
+        ids = [int(i) for i in ids]
+        if len(ids) <= 1 or any(i not in self._row for i in ids):
+            # tiny batches gain nothing from the array pass; a missing id
+            # keeps the sequential partial-prefix KeyError semantics
+            for i in ids:
+                self._delete_one(i)
+            self._comp = None
+            self._compact_journal()
+            return
+        k, t, D = self.core_k, self.t, len(ids)
+        rows_d = np.fromiter((self._row[i] for i in ids), np.int64, D)
+        slots_d = self._slots[rows_d]                  # (D, t)
+        ns = self._n_slots
+        flat_d = slots_d.ravel()
+        dep = np.bincount(flat_d, minlength=ns).astype(np.int32)
+        smask = self._elig_mask(ids)  # same eligibility as on insert
+        if smask is None:
+            core_dep, core_flat, rows_map = dep, flat_d, None
+        else:
+            rows_map = np.nonzero(smask)[0]
+            core_flat = slots_d[rows_map].ravel()
+            core_dep = np.bincount(core_flat, minlength=ns).astype(np.int32)
+        core_old = self._core_sizes(ns).copy()
+        core_new_sz = core_old - core_dep
+        new_sizes = self._bsize[:ns] - dep
+
+        # threshold down-crossings: the (old - k + 1)-th core-eligible
+        # departure drops the slot's core size below k, at that step
+        cross_slots = np.nonzero((core_old >= k) & (core_new_sz < k))[0]
+        cross_at: Dict[int, List[int]] = {}
+        if len(cross_slots):
+            order = np.argsort(core_flat, kind="stable")
+            sf = core_flat[order]
+            starts = np.searchsorted(sf, cross_slots)
+            entry = starts + (core_old[cross_slots] - k)
+            steps = order[entry] // t
+            if rows_map is not None:
+                steps = rows_map[steps]
+            for s, j in zip(cross_slots, steps):
+                cross_at.setdefault(int(j), []).append(int(s))
+
+        self._apply_occupancy_delta(dep, core_dep, ns)
+
+        # replay the sequential deletion events in batch order.  Border
+        # re-links are DEFERRED to one pass at the end: a disturbed
+        # border's sequential anchor is the min candidate, in the first
+        # table holding any, at its LAST re-link — and since candidate
+        # sets only shrink during a delete batch (no inserts, demotions
+        # only) while the chosen anchor by definition survives, that
+        # equals the min live core at batch end.  The sequential path's
+        # intermediate hops (re-anchor to a core deleted later in the
+        # batch, cascading more re-links) net out of the compacted
+        # journal, so state and delta feed are both bit-identical.
+        pending: Set[int] = set()
+        for j, idx in enumerate(ids):
+            row = self._row[idx]
+            self._record(idx, self._attach_handle(idx), None)
+            if self._support[row] > 0:
+                for y in self.anchored.pop(idx, ()):
+                    self._attach[self._row[y]] = -1
+                    self._record(y, idx, None)
+                    pending.add(y)
+            else:
+                a = int(self._attach[row])
+                if a >= 0:
+                    self.anchored[a].discard(idx)
+            for i in range(t):
+                self._member_discard(int(slots_d[j, i]), idx)
+            demoted: List[int] = []
+            for s in cross_at.get(j, ()):
+                for y in self._core_members(s):
+                    if not self._core_candidate(y):
+                        continue
+                    ry = self._row[y]
+                    self._support[ry] -= 1
+                    if self._support[ry] == 0:
+                        demoted.append(y)
+            for c in sorted(demoted):
+                for y in self.anchored.pop(c, ()):
+                    self._attach[self._row[y]] = -1
+                    self._record(y, c, None)
+                    pending.add(y)
+                self._record(c, c, None)
+                pending.add(c)
+            self.n_demotions += len(demoted)
+            self._ids[row] = -1
+            self._support[row] = 0
+            self._attach[row] = -1
+            self._free_rows.append(row)
+            del self._row[idx]
+
+        # end-of-batch re-link: min live core per slot, computed once per
+        # slot and shared across every disturbed border (the sequential
+        # cascade touches the same blob buckets over and over)
+        slot_best: Dict[int, int] = {}
+        for y in pending:
+            ry = self._row.get(y)
+            if ry is None:  # disturbed, then deleted later in the batch
+                continue
+            for i in range(t):
+                s = int(self._slots[ry, i])
+                c = slot_best.get(s, -2)
+                if c == -2:
+                    c = min((m for m in self._core_members(s)
+                             if self._support[self._row[m]] > 0),
+                            default=-1)
+                    slot_best[s] = c
+                if c >= 0:
+                    self._attach[ry] = c
+                    self.anchored.setdefault(c, set()).add(y)
+                    self._record(y, None, c)
+                    break
+
+        # emptied slots free once, at the end (their member sets emptied
+        # exactly when the final size reached zero)
+        for s in np.nonzero((dep > 0) & (new_sizes == 0))[0]:
+            self._free_slot(int(s))
         self._comp = None
         self._compact_journal()
+
+    def _apply_occupancy_delta(self, dep: np.ndarray, core_dep: np.ndarray,
+                               ns: int) -> None:
+        """Batched occupancy decrement (delete mirror of _batch_stats)."""
+        self._bsize[:ns] -= dep
 
     def _delete_one(self, idx: int) -> None:
         if idx not in self._row:
@@ -509,11 +811,12 @@ class SoADynamicDBSCAN:
         demoted: List[int] = []
         for i in range(self.t):
             s = int(self._slots[row, i])
-            self._members[s].discard(idx)
-            self._bsize[s] -= 1
-            if self._bsize[s] == self.k - 1:
+            self._member_discard(s, idx)
+            if self._bucket_shrink(s, idx):
                 # bucket drops below threshold: members lose support
-                for y in self._members[s]:
+                for y in self._core_members(s):
+                    if not self._core_candidate(y):
+                        continue
                     ry = self._row[y]
                     self._support[ry] -= 1
                     if self._support[ry] == 0:
@@ -539,6 +842,12 @@ class SoADynamicDBSCAN:
         self._free_rows.append(row)
         del self._row[idx]
 
+    def _bucket_shrink(self, s: int, idx: int) -> bool:
+        """Remove one occupant from slot ``s``; True when the removal
+        dropped the slot's support-driving size below the threshold."""
+        self._bsize[s] -= 1
+        return self._bsize[s] == self.core_k - 1
+
     def _relink(self, y: int, demoted_set: Set[int],
                 unchained: Set[int]) -> None:
         """LinkNonCorePoint against the *chained* set: current cores plus
@@ -548,7 +857,7 @@ class SoADynamicDBSCAN:
         ry = self._row[y]
         for i in range(self.t):
             s = int(self._slots[ry, i])
-            cands = [m for m in self._members[s]
+            cands = [m for m in self._core_members(s)
                      if m != y and m not in unchained
                      and (self._support[self._row[m]] > 0
                           or m in demoted_set)]
@@ -755,8 +1064,7 @@ class SoADynamicDBSCAN:
                 slots.ravel(), minlength=self._n_slots).astype(np.int32)
             self._add_members(slots, ids)
             # stored support must match the restored configuration
-            occ = self._bsize[slots]
-            recomputed = np.add.reduce(occ >= self.k, axis=1)
+            recomputed = self._rebuild_support(slots, ids)
             if not np.array_equal(recomputed, support):
                 raise ValueError("snapshot support counts do not match "
                                  "the restored bucket configuration")
@@ -767,6 +1075,11 @@ class SoADynamicDBSCAN:
         self._next_idx = int(state["next_idx"])
         self._comp = None
 
+    def _rebuild_support(self, slots: np.ndarray,
+                         ids: List[int]) -> np.ndarray:
+        """Per-point support implied by the restored configuration."""
+        return np.add.reduce(self._bsize[slots] >= self.core_k, axis=1)
+
     # ------------------------------------------------------------------ #
     # invariants (tests)
     # ------------------------------------------------------------------ #
@@ -776,17 +1089,9 @@ class SoADynamicDBSCAN:
         if len(rows) == 0:
             assert not self._members  # every bucket freed when it emptied
             return
-        # 1. support counts are exact
-        occ = self._bsize[self._slots[rows]]
-        assert np.array_equal(
-            np.add.reduce(occ >= self.k, axis=1), self._support[rows])
-        # 2. bucket sizes match membership; >=k buckets are all-core
         core_ids = {int(i) for i, r in zip(ids, rows)
                     if self._support[r] > 0}
-        for s, mem in self._members.items():
-            assert self._bsize[s] == len(mem), (s, self._bsize[s], len(mem))
-            if len(mem) >= self.k:
-                assert all(m in core_ids for m in mem)
+        self._check_counts(rows, ids, core_ids)
         # 3. attachment validity: anchor is a live core sharing a bucket;
         #    unattached non-core points see no core in any bucket (noise)
         for i, r in zip(ids, rows):
@@ -806,7 +1111,10 @@ class SoADynamicDBSCAN:
                 # legally coexists with unattached y, so only assert the
                 # noise condition when orphan re-attachment is on
                 for s in self._slots[r]:
-                    mem = self._members[int(s)]
+                    # cores are always core-candidates, so the candidate
+                    # pool view suffices (and stays valid for the
+                    # sampled subclass, which keeps no full membership)
+                    mem = self._core_members(int(s))
                     assert not (mem & core_ids) - {i}, (i, int(s))
         # 4. anchored maps mirror attach exactly
         n_anch = sum(len(v) for v in self.anchored.values())
@@ -814,11 +1122,23 @@ class SoADynamicDBSCAN:
             (self._support[rows] == 0) & (self._attach[rows] >= 0)))
         # 5. every core pair sharing a bucket shares a component (Thm 2)
         comp = self._ensure_comp()
-        for s, mem in self._members.items():
-            cs = [m for m in mem if m in core_ids]
+        for s in list(self._members):
+            cs = [m for m in self._core_members(s) if m in core_ids]
             if len(cs) > 1:
                 h0 = comp[self._row[cs[0]]]
                 assert all(comp[self._row[c]] == h0 for c in cs[1:])
+
+    def _check_counts(self, rows: np.ndarray, ids: np.ndarray,
+                      core_ids: Set[int]) -> None:
+        # 1. support counts are exact
+        occ = self._bsize[self._slots[rows]]
+        assert np.array_equal(
+            np.add.reduce(occ >= self.core_k, axis=1), self._support[rows])
+        # 2. bucket sizes match membership; >=k buckets are all-core
+        for s, mem in self._members.items():
+            assert self._bsize[s] == len(mem), (s, self._bsize[s], len(mem))
+            if len(mem) >= self.core_k:
+                assert all(m in core_ids for m in mem)
 
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:

@@ -39,6 +39,11 @@ def main(argv=None):
     ap.add_argument("--cluster-replicas", type=int, default=0,
                     help="replicas per clustering shard (failover instead "
                          "of failure when a shard worker dies)")
+    ap.add_argument("--tier", type=float, default=None, metavar="RATE",
+                    help="tiered request clustering (repro.tiered): serve "
+                         "labels from a sampled-core front tier at this "
+                         "sample_rate while the exact tier verifies "
+                         "asynchronously")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -50,7 +55,8 @@ def main(argv=None):
                         cluster_requests=args.cluster, embed_dim=8,
                         cluster_shards=args.cluster_shards,
                         cluster_transport=args.cluster_transport,
-                        cluster_replicas=args.cluster_replicas)
+                        cluster_replicas=args.cluster_replicas,
+                        cluster_tier=args.tier)
 
     rng = np.random.default_rng(0)
     t0 = time.time()

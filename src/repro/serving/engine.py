@@ -51,6 +51,7 @@ class ServingEngine:
                  cluster_workers: int = 0,
                  cluster_transport: str = "local",
                  cluster_replicas: int = 0,
+                 cluster_tier: Optional[float] = None,
                  obs: Obs = NULL_OBS):
         self.model = model
         # serving telemetry: per-op latency + scheduler state gauges.
@@ -85,12 +86,21 @@ class ServingEngine:
         # a shard worker dying mid-serve fails over instead of failing
         # requests.  label() on the sharded backend is an incremental
         # point query, so per-request labelling stays off the O(n) path.
+        # cluster_tier=<rate> switches to tiered serving (repro.tiered):
+        # a sampled-core front tier at that sample_rate labels requests
+        # immediately while the exact tier verifies asynchronously —
+        # divergence shows up on this engine's obs as tiered.* gauges.
+        if cluster_tier is not None:
+            cluster_backend = "tiered"
         self.clusterer = (
             build_index(ClusterConfig(d=embed_dim, k=4, t=6, eps=0.6,
                                       backend=cluster_backend,
                                       workers=cluster_workers,
                                       transport=cluster_transport,
                                       replicas=cluster_replicas,
+                                      sample_rate=(cluster_tier
+                                                   if cluster_tier is not None
+                                                   else 1.0),
                                       obs=obs.enabled)
                         .with_shards(cluster_shards))
             if cluster_requests else None

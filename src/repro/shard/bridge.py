@@ -87,11 +87,22 @@ class _Reps:
 
 class BoundaryBridge:
     def __init__(self, t: int, k: int, attach_orphans: bool = True,
-                 incremental: bool = True, obs: Obs = NULL_OBS):
+                 incremental: bool = True, obs: Obs = NULL_OBS,
+                 core_eligible: Optional[Callable[[int], bool]] = None):
         self.t, self.k = int(t), int(k)
         self.attach_orphans = attach_orphans
         self.incremental = bool(incremental)
         self.obs = obs
+        # Sampled-core mode (inner_backend="approx"): only points passing
+        # this predicate can gain support, and the threshold tests run on
+        # eligible-member counts (n_elig / elig_sc) instead of raw bucket
+        # sizes — mirroring SampledCoreDBSCAN's _ssize.  None = exact:
+        # the eligible structures stay empty and every test reads the raw
+        # counts, so the exact path pays nothing.
+        self.core_eligible = core_eligible
+        self.elig: Dict[int, bool] = {}  # predicate memoised per live id
+        self.n_elig: Dict[BucketKey, int] = {}
+        self.elig_sc: Dict[BucketKey, Dict[int, int]] = {}
         # instruments bound once (no-ops when un-instrumented); the
         # rep-cache counters split the lazy-repair bookkeeping into the
         # hit/miss view the observability report wants
@@ -215,6 +226,10 @@ class BoundaryBridge:
         if idx in self.keys:
             raise KeyError(f"index {idx} already present in bridge directory")
         inc = self.incremental
+        pred = self.core_eligible
+        e_idx = True if pred is None else bool(pred(idx))
+        if pred is not None:
+            self.elig[idx] = e_idx
         self.keys[idx] = keys
         self.support[idx] = 0
         self.home[idx] = shard
@@ -229,9 +244,20 @@ class BoundaryBridge:
             sc[shard] = sc.get(shard, 0) + 1
             if sc[shard] == 1 and len(sc) == 2:
                 self.n_boundary_buckets += 1
-            sz = len(mem)
+            # threshold tests run on eligible counts; a non-eligible
+            # arrival changes no count, so no crossing is possible
+            if pred is None:
+                sz, loc_sz = len(mem), sc[shard]
+            elif e_idx:
+                sz = self.n_elig[b] = self.n_elig.get(b, 0) + 1
+                es = self.elig_sc.setdefault(b, {})
+                loc_sz = es[shard] = es.get(shard, 0) + 1
+            else:
+                sz = loc_sz = 0
             if sz == self.k:
                 for y in mem:
+                    if pred is not None and not self.elig[y]:
+                        continue
                     if inc:
                         self._pre(pre, y)
                     self.support[y] += 1
@@ -245,12 +271,13 @@ class BoundaryBridge:
                 continue
             # local threshold crossing: members homed on this shard gain
             # local support (their home forest now chains this bucket)
-            if sc[shard] == self.k:
+            if loc_sz == self.k:
                 for y in mem:
-                    if self.home[y] == shard:
+                    if self.home[y] == shard and (pred is None
+                                                  or self.elig[y]):
                         self._pre(pre, y)
                         self.local_support[y] += 1
-            elif sc[shard] > self.k:
+            elif loc_sz > self.k:
                 self._pre(pre, idx)
                 self.local_support[idx] += 1
             self._refresh_interesting(b)
@@ -273,6 +300,8 @@ class BoundaryBridge:
             raise KeyError(
                 f"cannot delete index {idx}: not in bridge directory")
         inc = self.incremental
+        pred = self.core_eligible
+        e_idx = True if pred is None else self.elig[idx]
         was_core = self.support[idx] > 0
         cls_idx = (self._cls(self.support[idx], self.local_support[idx])
                    if inc else _NONCORE)
@@ -288,8 +317,32 @@ class BoundaryBridge:
                 del sc[shard]
                 if len(sc) == 1:
                     self.n_boundary_buckets -= 1
-            if len(mem) == self.k - 1:
+            # a non-eligible departure changes no eligible count: no
+            # crossing possible
+            if pred is None:
+                crossed = len(mem) == self.k - 1
+                loc_sz = sc.get(shard, 0)
+            elif e_idx:
+                ne = self.n_elig[b] - 1
+                if ne:
+                    self.n_elig[b] = ne
+                else:
+                    del self.n_elig[b]
+                crossed = ne == self.k - 1
+                es = self.elig_sc[b]
+                es[shard] -= 1
+                if es[shard] == 0:
+                    del es[shard]
+                    if not es:
+                        del self.elig_sc[b]
+                loc_sz = es.get(shard, 0)
+            else:
+                crossed = False
+                loc_sz = self.k  # sentinel: no local crossing either
+            if crossed:
                 for y in mem:
+                    if pred is not None and not self.elig[y]:
+                        continue
                     if inc:
                         self._pre(pre, y)
                     self.support[y] -= 1
@@ -300,9 +353,10 @@ class BoundaryBridge:
                 if was_core:
                     self._drop_core_from(b)
                 # local threshold crossing on the vacated shard
-                if sc.get(shard, 0) == self.k - 1:
+                if loc_sz == self.k - 1:
                     for y in mem:
-                        if self.home[y] == shard:
+                        if self.home[y] == shard and (pred is None
+                                                      or self.elig[y]):
                             self._pre(pre, y)
                             self.local_support[y] -= 1
             if not mem:
@@ -311,6 +365,8 @@ class BoundaryBridge:
                 self.n_cores.pop(b, None)
                 self._rep.pop(b, None)
                 self._reps.pop(b, None)
+                self.n_elig.pop(b, None)
+                self.elig_sc.pop(b, None)
             if inc:
                 self._refresh_interesting(b)
         if inc:
@@ -319,6 +375,8 @@ class BoundaryBridge:
                     self._drop_core_from((i, key))
         del self.keys[idx]
         del self.support[idx]
+        if pred is not None:
+            del self.elig[idx]
         if inc:
             del self.home[idx]
             del self.local_support[idx]
@@ -345,6 +403,8 @@ class BoundaryBridge:
             pre[idx] = (0, 0)  # re-class from scratch after the move
             self.home[idx] = dst
             self.local_support[idx] = 0  # recomputed bucket by bucket
+        pred = self.core_eligible
+        e_idx = True if pred is None else self.elig[idx]
         for i, key in enumerate(self.keys[idx]):
             b = (i, key)
             sc = self.shard_count[b]
@@ -360,19 +420,34 @@ class BoundaryBridge:
                 self.n_boundary_buckets += 1
             if not inc:
                 continue
+            # local crossings run on eligible per-shard counts; moving a
+            # non-eligible point shifts none of them
+            if pred is None:
+                es = sc
+            elif e_idx:
+                es = self.elig_sc[b]
+                es[src] -= 1
+                if es[src] == 0:
+                    del es[src]
+                es[dst] = es.get(dst, 0) + 1
+            else:
+                self._refresh_interesting(b)
+                continue
             # src shard lost a member: crossing k-1 demotes its residents
-            if sc.get(src, 0) == self.k - 1:
+            if es.get(src, 0) == self.k - 1:
                 for y in self.members[b]:
-                    if y != idx and self.home[y] == src:
+                    if (y != idx and self.home[y] == src
+                            and (pred is None or self.elig[y])):
                         self._pre(pre, y)
                         self.local_support[y] -= 1
             # dst shard gained one: crossing k promotes its residents
-            if sc[dst] == self.k:
+            if es.get(dst, 0) == self.k:
                 for y in self.members[b]:
-                    if y != idx and self.home[y] == dst:
+                    if (y != idx and self.home[y] == dst
+                            and (pred is None or self.elig[y])):
                         self._pre(pre, y)
                         self.local_support[y] += 1
-            if sc[dst] >= self.k:
+            if es.get(dst, 0) >= self.k:
                 self.local_support[idx] += 1
             self._refresh_interesting(b)
         if inc:
@@ -638,11 +713,31 @@ class BoundaryBridge:
     def check(self, home: Dict[int, int]) -> None:
         """Directory self-check against the home map (used by tests)."""
         assert set(self.keys) == set(home), "directory/home id mismatch"
-        # support counts are exact w.r.t. global bucket sizes
+        pred = self.core_eligible
+        # support counts are exact w.r.t. global (eligible) bucket sizes
         for idx, keys in self.keys.items():
-            s = sum(1 for i, key in enumerate(keys)
-                    if len(self.members[(i, key)]) >= self.k)
+            if pred is None:
+                s = sum(1 for i, key in enumerate(keys)
+                        if len(self.members[(i, key)]) >= self.k)
+            elif self.elig[idx]:
+                s = sum(1 for i, key in enumerate(keys)
+                        if self.n_elig.get((i, key), 0) >= self.k)
+            else:
+                s = 0
             assert s == self.support[idx], (idx, s, self.support[idx])
+        # eligible-count structures are exact mirrors of membership
+        if pred is not None:
+            assert set(self.elig) == set(self.keys)
+            for idx in self.keys:
+                assert self.elig[idx] == bool(pred(idx)), idx
+            for b, mem in self.members.items():
+                ne = sum(1 for m in mem if self.elig[m])
+                assert ne == self.n_elig.get(b, 0), (b, ne)
+                esc: Dict[int, int] = {}
+                for m in mem:
+                    if self.elig[m]:
+                        esc[home[m]] = esc.get(home[m], 0) + 1
+                assert esc == self.elig_sc.get(b, {}), (b, esc)
         # per-shard occupancy matches the home map; boundary count exact
         n_boundary = 0
         for b, mem in self.members.items():
@@ -661,10 +756,19 @@ class BoundaryBridge:
     def _check_incremental(self, home: Dict[int, int]) -> None:
         """The maintained boundary structure is exact."""
         assert self.home == home
+        pred = self.core_eligible
         for idx, keys in self.keys.items():
-            loc = sum(
-                1 for i, key in enumerate(keys)
-                if self.shard_count[(i, key)].get(home[idx], 0) >= self.k)
+            if pred is None:
+                loc = sum(
+                    1 for i, key in enumerate(keys)
+                    if self.shard_count[(i, key)].get(home[idx], 0) >= self.k)
+            elif self.elig[idx]:
+                loc = sum(
+                    1 for i, key in enumerate(keys)
+                    if self.elig_sc.get((i, key), {}).get(home[idx], 0)
+                    >= self.k)
+            else:
+                loc = 0
             assert loc == self.local_support[idx], (
                 idx, loc, self.local_support[idx])
         interesting: Set[BucketKey] = set()

@@ -85,7 +85,7 @@ from ..service.transport import (ShardClient, ShardUnavailableError,
 from .bridge import BoundaryBridge
 from .router import RebalancePlan, ShardRouter
 
-UNSUPPORTED_INNER = ("naive", "emz-fixed", "sharded")
+UNSUPPORTED_INNER = ("naive", "emz-fixed", "sharded", "tiered")
 
 PlanLike = Union[RebalancePlan, Tuple[int, int, int]]
 
@@ -142,10 +142,24 @@ class ShardedIndex(ClusterIndex):
             c.hello().native_component_queries for c in self.clients
         )
         self.native_component_queries = self._incremental
-        self.bridge = BoundaryBridge(cfg.t, cfg.k,
+        # sampled inners (inner_backend="approx"): the bridge must judge
+        # global support over the same deterministic id sample the inner
+        # engines use, or a cross-shard bucket of non-sampled points
+        # would mint cores no inner engine recognises
+        core_eligible = None
+        bridge_k = cfg.k
+        if cfg.inner_backend == "approx" and cfg.sample_rate < 1.0:
+            from ..core.approx import is_sampled
+            rate, aseed = cfg.sample_rate, cfg.approx_seed
+            core_eligible = lambda i: is_sampled(i, rate, aseed)  # noqa: E731
+            # eligible counts are compared against the sampled analogue
+            # of k — the same rescaled threshold SampledCoreDBSCAN uses
+            bridge_k = max(1, int(round(cfg.k * cfg.sample_rate)))
+        self.bridge = BoundaryBridge(cfg.t, bridge_k,
                                      attach_orphans=cfg.attach_orphans,
                                      incremental=self._incremental,
-                                     obs=self.obs)
+                                     obs=self.obs,
+                                     core_eligible=core_eligible)
         # coordinator-side instruments, bound once (no-ops when cfg.obs is
         # off): per-op latency plus one RPC histogram per shard — the
         # telemetry the straggler detector and the serving report read

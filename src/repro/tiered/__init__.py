@@ -1,0 +1,29 @@
+"""``repro.tiered`` — tiered serving: approximate answers, exact verification.
+
+The tier structure the heavy-read north star wants:
+
+  * a **front** tier (``backend="approx"``, sampled cores) absorbs every
+    mutation synchronously and serves ``label()``/``labels()``
+    immediately — the caller pays approximate-engine update cost only;
+  * a **back** tier (exact SoA engine) receives the same mutation stream
+    through a bounded queue drained by a verifier thread — exact labels
+    trail the stream by the queue lag instead of gating it;
+  * the verifier periodically **diffs** the tiers (ARI over the common
+    live set, ``core/metrics.py``) and exports ``tiered.lag``,
+    ``tiered.queue_depth`` and ``tiered.divergence_ari`` gauges through
+    ``repro.obs``;
+  * a :class:`DivergencePolicy` remembers which buckets recently
+    disagreed, and ``label()`` **escalates** queries for points in those
+    buckets to the exact tier.
+
+Register-once: ``backend="tiered"`` builds a :class:`TieredIndex` from
+one ``ClusterConfig`` (``sample_rate`` configures the front tier), so
+serving, checkpoints, and benchmarks construct it like any other
+backend.
+"""
+
+from .index import TieredIndex
+from .policy import DivergencePolicy
+from .verifier import Verifier
+
+__all__ = ["TieredIndex", "DivergencePolicy", "Verifier"]

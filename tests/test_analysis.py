@@ -490,9 +490,25 @@ class TestRegistryConformance:
         from repro.api.index import ClusterIndex
         from repro.analysis.registry_pass import _subclass_closure
         import repro.shard  # noqa: F401 — registers the sharded backend
+        import repro.tiered  # noqa: F401 — registers the tiered backend
 
         names = {c.__name__ for c in _subclass_closure(ClusterIndex)}
-        assert {"EulerTourIndex", "RecomputeIndex", "ShardedIndex"} <= names
+        assert {"EulerTourIndex", "RecomputeIndex", "ShardedIndex",
+                "ApproxIndex", "TieredIndex"} <= names
+
+    def test_tiered_backends_conform(self, tmp_path):
+        # the sampled tier's index classes pass the same conformance
+        # rules as the seeded-good fixture — pinned here directly so a
+        # regression names the class, not just "registry not clean"
+        from repro.api.backends import ApproxIndex
+        from repro.api.index import ClusterIndex
+        from repro.tiered import TieredIndex
+
+        project = make_project(tmp_path, {"__init__.py": ""})
+        found = RegistryConformance(
+            classes=(ApproxIndex, TieredIndex),
+            base=ClusterIndex).run(project)
+        assert found == [], rules(found)
 
 
 # ---------------------------------------------------------------------- #

@@ -58,3 +58,28 @@ def test_ari_symmetry():
     b = rng.integers(0, 3, 200)
     assert adjusted_rand_index(a, b) == pytest.approx(adjusted_rand_index(b, a))
     assert normalized_mutual_info(a, b) == pytest.approx(normalized_mutual_info(b, a))
+
+
+def test_empty_and_singleton_streams():
+    # no pair information: identical-partition convention says 1.0 for
+    # both metrics (the tiered verifier diffs windows that can be empty
+    # right after an expiry round — this must not divide by zero)
+    assert adjusted_rand_index([], []) == pytest.approx(1.0)
+    assert normalized_mutual_info([], []) == pytest.approx(1.0)
+    assert adjusted_rand_index([3], [9]) == pytest.approx(1.0)
+
+
+def test_all_noise_windows_agree():
+    # two all-noise labellings are the same (single-block) partition
+    a = [-1] * 8
+    assert adjusted_rand_index(a, a) == pytest.approx(1.0)
+    assert normalized_mutual_info(a, a) == pytest.approx(1.0)
+    # all-noise vs one real cluster is still one block vs one block
+    assert adjusted_rand_index(a, [4] * 8) == pytest.approx(1.0)
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        adjusted_rand_index([0, 1], [0])
+    with pytest.raises(ValueError, match="shape mismatch"):
+        normalized_mutual_info([0, 1], [0])
